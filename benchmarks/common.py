@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: CSV output + dataset cache."""
+from __future__ import annotations
+
+import functools
+import time
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+
+def write_csv(name: str, header: str, rows) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    fp = OUT_DIR / f"{name}.csv"
+    with fp.open("w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return fp
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, seed: int = 0):
+    from repro.data.synthetic import paper_dataset
+    return paper_dataset(name, seed)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,74 @@
+"""Layer-B headline: gossip parameter averaging vs gradient all-reduce.
+
+Two measurements:
+ (1) ON-MESH COLLECTIVE BYTES (from dry-run artifacts when present): the
+     per-step cross-replica wire bytes of the gossip step vs the all-reduce
+     step for the same (arch x shape) — the datacenter transcription of the
+     paper's 'one message per node per cycle' cost model.
+ (2) CONVERGENCE (CPU-runnable): same ~1-10M-param LM trained with gossip
+     (MU/UM, hypercube) and with exact all-reduce DP; loss curves + peer
+     disagreement show the accuracy cost of replacing the all-reduce.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def wire_bytes_comparison():
+    rows = []
+    for gp in sorted(RESULTS.glob("*__gossip.json")):
+        g = json.loads(gp.read_text())
+        if g.get("status") != "ok":
+            continue
+        ap = RESULTS / gp.name.replace("__gossip", "__allreduce")
+        if not ap.exists():
+            continue
+        a = json.loads(ap.read_text())
+        if a.get("status") != "ok":
+            continue
+        rows.append((g["arch"], g["shape"], g["mesh"],
+                     int(a["collective_wire_bytes"]),
+                     int(g["collective_wire_bytes"]),
+                     round(a["collective_wire_bytes"]
+                           / max(g["collective_wire_bytes"], 1), 2)))
+        print(f"gossip_vs_ar,{g['arch']},{g['shape']},"
+              f"ar_wire={a['collective_wire_bytes']:.3e},"
+              f"gossip_wire={g['collective_wire_bytes']:.3e},"
+              f"ratio={rows[-1][-1]}")
+    if rows:
+        write_csv("gossip_vs_allreduce_wire",
+                  "arch,shape,mesh,allreduce_wire_B,gossip_wire_B,ratio", rows)
+    return rows
+
+
+def convergence_comparison(quick: bool = False):
+    from repro.launch.train import train
+    steps = 30 if quick else 150
+    rows = []
+    for dist, merge in [("allreduce", "-"), ("gossip", "mu"), ("gossip", "rw")]:
+        _, hist = train("qwen3-1.7b", reduced=True, steps=steps, batch=8,
+                        seq_len=64, lr=2e-3, dist=dist, n_peers=4,
+                        merge=merge if merge != "-" else "mu",
+                        log_every=max(steps // 6, 1), seed=0)
+        for s, loss, dis in hist:
+            rows.append((dist if merge != "rw" else "localsgd-rw", s,
+                         round(loss, 4), f"{dis:.2e}"))
+        print(f"gossip_vs_ar_convergence,{dist}-{merge},"
+              f"final_loss={hist[-1][1]:.4f}")
+    write_csv("gossip_vs_allreduce_convergence",
+              "dist,step,loss,peer_disagreement", rows)
+    return rows
+
+
+def run(quick: bool = False):
+    rows = wire_bytes_comparison()
+    rows += [tuple(r) for r in convergence_comparison(quick)]
+    return rows

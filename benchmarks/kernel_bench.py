@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: fused Pallas (interpret on CPU) vs the XLA path.
+
+On this CPU host, interpret-mode timings measure the Python-level kernel
+body, NOT TPU performance — the structural numbers that matter (and that we
+report) are the HBM-traffic models: the fused merge+update kernel moves
+3 reads + 1 write per model pair vs 4 reads + 2 writes unfused (1.5x), and
+flash attention's working set is O(blk_q x blk_k) vs O(S^2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.core.learners import LinearModel, make_update
+from repro.core.merge import create_model_mu
+from repro.kernels import gossip_merge as gm
+from repro.kernels import pegasos_update as pu
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    n, d = (256, 1024) if quick else (2048, 4096)
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 6)
+    w1 = jax.random.normal(ks[0], (n, d), jnp.float32)
+    w2 = jax.random.normal(ks[1], (n, d), jnp.float32)
+    x = jax.random.normal(ks[2], (n, d), jnp.float32)
+    t1 = jax.random.randint(ks[3], (n,), 1, 50)
+    t2 = jax.random.randint(ks[4], (n,), 1, 50)
+    y = jnp.sign(jax.random.normal(ks[5], (n,)))
+
+    rows = []
+    # XLA reference (what the fused kernel replaces)
+    xla_mu = jax.jit(lambda: ref.merge_update_ref(w1, t1, w2, t2, x, y, 1e-2))
+    us = _time(xla_mu)
+    rows.append(("mu_xla_ref", us, f"n={n};d={d}"))
+    us2 = _time(lambda: gm.merge_update(w1, t1, w2, t2, x, y, lam=1e-2,
+                                        interpret=True))
+    rows.append(("mu_pallas_interpret", us2, "CPU interpret (functional only)"))
+    us3 = _time(lambda: pu.pegasos_update(w1, t1, x, y, lam=1e-2,
+                                          interpret=True))
+    rows.append(("pegasos_pallas_interpret", us3, ""))
+    # traffic model (bytes per model pair)
+    unfused = (4 + 2) * d * 4
+    fused = (3 + 1) * d * 4
+    rows.append(("mu_hbm_bytes_unfused", unfused, "per model pair"))
+    rows.append(("mu_hbm_bytes_fused", fused,
+                 f"{unfused/fused:.2f}x traffic cut"))
+    for name, us, note in rows:
+        print(f"kernel,{name},{us:.1f},{note}")
+    write_csv("kernels", "name,us_per_call,derived", rows)
+    return rows

@@ -1,0 +1,75 @@
+"""Render the §Roofline table from the dry-run artifacts (results/dryrun)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import write_csv
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+RESULTS_OPT = Path(__file__).resolve().parent.parent / "results" / "dryrun_opt"
+
+
+def load_records(mesh: str = "single", dist: str = "allreduce"):
+    recs = []
+    for fp in sorted(RESULTS.glob(f"*__{mesh}__{dist}.json")):
+        recs.append(json.loads(fp.read_text()))
+    return recs
+
+
+def compare(quick: bool = False):
+    """v0 vs optimized roofline per (arch x shape), single pod."""
+    rows = []
+    for fp in sorted(RESULTS.glob("*__single__allreduce.json")):
+        b = json.loads(fp.read_text())
+        op = RESULTS_OPT / fp.name
+        if b.get("status") != "ok" or not op.exists():
+            continue
+        o = json.loads(op.read_text())
+        t0 = b["compute_s"] + b["memory_s"] + b["collective_s"]
+        t1 = o["compute_s"] + o["memory_s"] + o["collective_s"]
+        rows.append((b["arch"], b["shape"], round(t0, 3), round(t1, 3),
+                     round(t0 / max(t1, 1e-12), 2), b["dominant"],
+                     o["dominant"], round(b["useful_ratio"], 2),
+                     round(o["useful_ratio"], 2)))
+        print(f"roofline_compare,{b['arch']},{b['shape']},v0={t0:.3f}s,"
+              f"opt={t1:.3f}s,speedup={t0/max(t1,1e-12):.2f}x")
+    if rows:
+        write_csv("roofline_compare",
+                  "arch,shape,v0_total_s,opt_total_s,speedup,"
+                  "v0_dominant,opt_dominant,v0_useful,opt_useful", rows)
+    return rows
+
+
+def run(quick: bool = False):
+    compare(quick)
+    rows = []
+    for r in load_records():
+        if r.get("status") == "skip":
+            rows.append((r["arch"], r["shape"], "skip", 0, 0, 0, "-", 0,
+                         r.get("reason", "")[:40]))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], "FAIL", 0, 0, 0, "-", 0, ""))
+            continue
+        rows.append((
+            r["arch"], r["shape"], "ok",
+            round(r["compute_s"] * 1e3, 3),
+            round(r["memory_s"] * 1e3, 3),
+            round(r["collective_s"] * 1e3, 3),
+            r["dominant"],
+            round(r["useful_ratio"], 3),
+            "+".join(f"{k}:{v}" for k, v in
+                     sorted(r.get("collective_counts", {}).items())),
+        ))
+        print(f"roofline,{r['arch']},{r['shape']},compute_ms="
+              f"{r['compute_s']*1e3:.2f},memory_ms={r['memory_s']*1e3:.2f},"
+              f"collective_ms={r['collective_s']*1e3:.2f},"
+              f"dominant={r['dominant']},useful={r['useful_ratio']:.2f}")
+    if rows:
+        write_csv("roofline",
+                  "arch,shape,status,compute_ms,memory_ms,collective_ms,"
+                  "dominant,useful_ratio,collectives", rows)
+    else:
+        print("roofline,no dry-run artifacts found (run repro.launch.dryrun)")
+    return rows

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's protocol in ~30 lines of driver code.
+
+Runs gossip learning (P2PegasosMU) on the Spambase surrogate — 4,140 peers,
+ONE data record each — and prints the 0-1 test error of the freshest and the
+voted (cache-of-10) local predictions every few cycles, next to the
+independent-random-walk baseline (P2PegasosRW = sequential Pegasos).
+
+    PYTHONPATH=src python examples/quickstart.py [--cycles 120]
+
+Expected: MU converges orders of magnitude faster than RW (the paper's
+headline Fig. 1 claim); voting helps RW a lot and MU a little (Fig. 3).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.core.simulation import run_simulation
+from repro.data.synthetic import paper_dataset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cycles", type=int, default=120)
+    ap.add_argument("--dataset", default="spambase",
+                    choices=["spambase", "reuters", "malicious-urls"])
+    args = ap.parse_args()
+
+    X, y, Xt, yt, cfg = paper_dataset(args.dataset)
+    print(f"dataset={cfg.name}: N={X.shape[0]} peers (one record each), "
+          f"d={X.shape[1]}, test={Xt.shape[0]}")
+
+    for variant in ("rw", "mu"):
+        c = dataclasses.replace(cfg, variant=variant)
+        res = run_simulation(c, X, y, Xt, yt, cycles=args.cycles,
+                             eval_every=max(args.cycles // 8, 1), seed=0)
+        print(f"\nP2Pegasos{variant.upper()}")
+        print(f"  {'cycle':>6} {'err(fresh)':>11} {'err(voted)':>11} "
+              f"{'model-similarity':>17}")
+        for cyc, ef, ev, sim in zip(res.cycles, res.err_fresh,
+                                    res.err_voted, res.similarity):
+            print(f"  {cyc:>6} {ef:>11.4f} {ev:>11.4f} {sim:>17.4f}")
+
+
+if __name__ == "__main__":
+    main()

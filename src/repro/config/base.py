@@ -1,0 +1,265 @@
+"""Dataclass config system.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+reduced smoke variants are derived mechanically (see ``registry.reduced_config``).
+``InputShape`` captures the four assigned workload shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    sliding_window: Optional[int] = None   # None = full attention
+    causal: bool = True
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # 'expert'  -> experts sharded over the model axis (all-to-all dispatch);
+    # 'tensor'  -> expert d_ff sharded over the model axis (no all-to-all).
+    sharding: str = "expert"
+    # GShard-style grouped dispatch: tokens are split into this many groups
+    # (the data-parallel shard count), each with its OWN capacity computed
+    # from the group's token count. 1 = ungrouped (global capacity — only
+    # correct on a single device; under pjit it materializes the full
+    # (E, C_global, D) buffer on every device). Set by the step builders to
+    # the batch-shard size. See EXPERIMENTS.md §Perf (mixtral hillclimb).
+    dispatch_groups: int = 1
+    # 'gather' — combine gathers from the psum'd (G,E,C,D) buffer;
+    # 'reduce' — manual shard_map combine-before-reduce for 'tensor' mode
+    # (TP all-reduce operand T*D instead of E*C*D; §Perf B-4). Set by the
+    # step builders; falls back to 'gather' without a mesh context.
+    combine: str = "gather"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD block config [arXiv:2405.21060]."""
+
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+    d_conv: int = 4
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RG-LRU recurrent block config (Griffin / RecurrentGemma [arXiv:2402.19427])."""
+
+    lru_width: int = 0           # 0 -> d_model
+    d_conv: int = 4
+    num_heads: int = 0           # block-diagonal gate heads; 0 -> attention heads
+    c: float = 8.0               # the fixed exponent scale from the paper
+    local_window: int = 2048     # window of the interleaved local-attention layers
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder tower for enc-dec backbones (whisper). Frontend is stubbed:
+    input_specs() provides precomputed (B, source_len, d_model) frame embeddings."""
+
+    num_layers: int
+    source_len: int              # 1500 frames for whisper-medium (30 s)
+    d_model: int = 0             # 0 -> decoder d_model
+    causal: bool = False
+
+
+@dataclass(frozen=True)
+class CrossAttnConfig:
+    """Interleaved gated cross-attention (Llama-3.2-Vision style)."""
+
+    every_n_layers: int          # one cross-attn layer per this many layers
+    source_len: int              # e.g. 1601 patch embeddings per image tile
+    gated: bool = True
+
+
+# ---------------------------------------------------------------------------
+# the model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    cross_attn: Optional[CrossAttnConfig] = None
+    # repeating layer pattern; 'attn' (global), 'local' (sliding window),
+    # 'rglru', 'ssm', 'cross'. The full layer stack is the pattern tiled to
+    # num_layers (remainder layers take the pattern prefix).
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    norm_eps: float = 1e-6
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    act: str = "swiglu"               # swiglu | gelu
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    max_target_positions: int = 0     # 0 = unbounded (rope); whisper: 448
+    remat: bool = True
+    scan_layers: bool = True
+    citation: str = ""
+    # attention implementation: 'chunked' (memory-efficient lax.scan over
+    # query blocks — the XLA-level flash equivalent), 'xla' (naive full
+    # logits), or 'pallas' (the flash kernel; TPU backends)
+    attn_impl: str = "chunked"
+    attn_chunk: int = 512          # query-block size for 'chunked'
+    xent_chunk: int = 512          # sequence-chunk for the chunked xent loss
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ----- derived quantities ------------------------------------------------
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        p = self.layer_pattern
+        reps, rem = divmod(self.num_layers, len(p))
+        return p * reps + p[:rem]
+
+    def param_count(self) -> int:
+        """Total parameter count (embedding + layers + head), exact for our
+        implementation (used for MODEL_FLOPS = 6·N·D roofline term)."""
+        from repro.models.transformer import model_spec
+        from repro.models.layers import spec_param_count
+        return spec_param_count(model_spec(self))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts count)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        # per-expert FFN params (3 matrices for swiglu, 2 for gelu)
+        nmat = 3 if self.act == "swiglu" else 2
+        per_expert = nmat * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(1 for k in self.layer_kinds() if k in ("attn", "local"))
+        # MoE replaces the dense FFN in every layer for our moe configs
+        n_moe_layers = self.num_layers
+        inactive = (m.num_experts - m.top_k) * per_expert * n_moe_layers
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# workload shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# run / distribution configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.pods > 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+@dataclass(frozen=True)
+class GossipConfig:
+    """Layer-B gossip optimizer settings (the paper's protocol on the mesh)."""
+
+    enabled: bool = True
+    schedule: str = "hypercube"    # hypercube | ring | random
+    merge: str = "mu"              # mu | um | rw  (rw = no merge: plain local SGD)
+    pod_every: int = 8             # gossip across the pod axis every K steps
+    seed: int = 0
+    # beyond-paper: wire dtype for the exchanged model ("" = param dtype;
+    # "bf16" halves the sync wire, averaging still in f32)
+    exchange_dtype: str = ""
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 1024
+    global_batch: int = 32
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    optimizer: str = "adamw"       # adamw | sgdm | pegasos
+    grad_clip: float = 1.0
+    seed: int = 0
+    log_every: int = 10
+    eval_every: int = 0
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 4096
+    batch_size: int = 8
+    prefill_len: int = 512
+    decode_steps: int = 64
+    window: Optional[int] = None   # windowed KV cache (ring buffer) if set
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+    gossip: GossipConfig = field(default_factory=GossipConfig)

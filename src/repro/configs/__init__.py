@@ -1,0 +1,31 @@
+"""Assigned-architecture configs. Importing this package registers all ids.
+
+ARCH_IDS lists the 10 assigned architectures; ``gossip-linear`` is the
+paper's own model family (linear SVM / Adaline over fully distributed data).
+"""
+from repro.configs import (  # noqa: F401
+    gossip_linear,
+    llama3_405b,
+    llama32_vision_11b,
+    llama4_scout,
+    mamba2_780m,
+    mixtral_8x22b,
+    qwen3_1p7b,
+    qwen3_4b,
+    qwen3_8b,
+    recurrentgemma_9b,
+    whisper_medium,
+)
+
+ARCH_IDS = [
+    "llama-3.2-vision-11b",
+    "qwen3-8b",
+    "whisper-medium",
+    "recurrentgemma-9b",
+    "mamba2-780m",
+    "qwen3-1.7b",
+    "mixtral-8x22b",
+    "qwen3-4b",
+    "llama3-405b",
+    "llama4-scout-17b-a16e",
+]

@@ -1,0 +1,27 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E] — MoE 16e top-1.
+
+16 experts divide the 16-way model axis exactly -> 'expert' sharding profile
+(expert parallelism; the dispatch scatter lowers to an all-to-all)."""
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig, MoEConfig, ModelConfig, register_config
+
+
+@register_config("llama4-scout-17b-a16e")
+def llama4_scout() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        d_ff=8192,
+        vocab_size=202_048,
+        attention=AttentionConfig(num_heads=40, num_kv_heads=8, head_dim=128,
+                                  rope_theta=500_000.0,
+                                  sliding_window=8192),
+        moe=MoEConfig(num_experts=16, top_k=1, d_ff_expert=8192,
+                      sharding="expert"),
+        layer_pattern=("attn",),
+        param_dtype=jnp.bfloat16,
+        citation="[hf:meta-llama/Llama-4-Scout-17B-16E]",
+    )

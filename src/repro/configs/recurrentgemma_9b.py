@@ -1,0 +1,28 @@
+"""RecurrentGemma-9B [arXiv:2402.19427] — RG-LRU + local attention, 2:1.
+
+Pattern (rglru, rglru, local): two recurrent blocks per local-attention
+block, window 2048 — the Griffin layout. 38 layers = 12 full periods + 2
+remainder rglru layers (unrolled tail)."""
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig, ModelConfig, RGLRUConfig, register_config
+
+
+@register_config("recurrentgemma-9b")
+def recurrentgemma_9b() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        num_layers=38,
+        d_model=4096,
+        d_ff=12_288,
+        vocab_size=256_000,
+        attention=AttentionConfig(num_heads=16, num_kv_heads=1, head_dim=256,
+                                  rope_theta=10_000.0),
+        rglru=RGLRUConfig(lru_width=4096, d_conv=4, num_heads=16, c=8.0,
+                          local_window=2048),
+        layer_pattern=("rglru", "rglru", "local"),
+        act="gelu",
+        param_dtype=jnp.bfloat16,
+        citation="[arXiv:2402.19427]",
+    )

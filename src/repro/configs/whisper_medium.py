@@ -1,0 +1,32 @@
+"""Whisper-medium [arXiv:2212.04356] — enc-dec; mel+conv frontend stubbed.
+
+24 encoder + 24 decoder layers, d_model 1024, 16 heads (MHA), learned
+decoder positions capped at 448 target positions, LayerNorm + GELU, tied
+embeddings — the Whisper architecture. input_specs() provides the (B, 1500,
+1024) frame embeddings the conv frontend would produce."""
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig, EncoderConfig, ModelConfig, register_config
+
+
+@register_config("whisper-medium")
+def whisper_medium() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        num_layers=24,
+        d_model=1024,
+        d_ff=4096,
+        vocab_size=51_865,
+        attention=AttentionConfig(num_heads=16, num_kv_heads=16, head_dim=64,
+                                  use_rope=False),
+        encoder=EncoderConfig(num_layers=24, source_len=1500),
+        layer_pattern=("selfcross",),
+        norm="layernorm",
+        norm_eps=1e-5,
+        act="gelu",
+        tie_embeddings=True,
+        max_target_positions=448,
+        param_dtype=jnp.float32,
+        citation="[arXiv:2212.04356]",
+    )

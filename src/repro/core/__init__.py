@@ -1,0 +1,35 @@
+from repro.core.learners import (
+    LinearModel,
+    init_model,
+    pegasos_update,
+    adaline_update,
+    logistic_update,
+    make_update,
+)
+from repro.core.merge import merge, create_model, VARIANTS
+from repro.core.cache import ModelCache, init_cache, cache_add, freshest, voted_predict
+from repro.core.simulation import SimState, run_simulation, simulate_cycle, churn_trace
+from repro.core.ensemble import run_weighted_bagging, run_sequential_pegasos
+from repro.core.gossip_optimizer import (
+    GossipState,
+    stack_for_peers,
+    unstack_mean,
+    gossip_merge,
+    peer_disagreement,
+    make_gossip_train_step,
+    make_allreduce_train_step,
+    perms_for_step,
+    linear_gossip_mesh_step,
+)
+from repro.core import peer_sampling, theory
+
+__all__ = [
+    "LinearModel", "init_model", "pegasos_update", "adaline_update",
+    "logistic_update", "make_update", "merge", "create_model", "VARIANTS",
+    "ModelCache", "init_cache", "cache_add", "freshest", "voted_predict",
+    "SimState", "run_simulation", "simulate_cycle", "churn_trace",
+    "run_weighted_bagging", "run_sequential_pegasos",
+    "GossipState", "stack_for_peers", "unstack_mean", "gossip_merge",
+    "peer_disagreement", "make_gossip_train_step", "make_allreduce_train_step",
+    "perms_for_step", "linear_gossip_mesh_step", "peer_sampling", "theory",
+]

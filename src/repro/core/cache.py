@@ -1,0 +1,71 @@
+"""Bounded model cache + local prediction (Algorithm 1 state, Algorithm 4).
+
+Each node keeps the ``cache_size`` most recent models that passed through it
+(a ring buffer). Prediction is free locally: PREDICT uses the freshest
+model; VOTEDPREDICT majority-votes the cache — the paper's Fig. 3 shows this
+significantly accelerates RW and slightly accelerates MU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ModelCache(NamedTuple):
+    w: jnp.ndarray        # (N, C, d)
+    t: jnp.ndarray        # (N, C) int32
+    ptr: jnp.ndarray      # (N,) int32 — next write slot
+    count: jnp.ndarray    # (N,) int32 — number of valid entries
+
+
+def init_cache(n: int, c: int, d: int) -> ModelCache:
+    """Cache initialized with the zero model (INITMODEL adds it)."""
+    return ModelCache(
+        w=jnp.zeros((n, c, d), jnp.float32),
+        t=jnp.zeros((n, c), jnp.int32),
+        ptr=jnp.ones((n,), jnp.int32),   # slot 0 holds the init model
+        count=jnp.ones((n,), jnp.int32),
+    )
+
+
+def cache_add(cache: ModelCache, node_mask, w_new, t_new) -> ModelCache:
+    """Vectorized ``modelCache.add`` on the subset ``node_mask`` of nodes.
+
+    w_new: (N, d); nodes where node_mask is False are untouched."""
+    n, c, d = cache.w.shape
+    rows = jnp.arange(n)
+    slot = cache.ptr % c
+    w = cache.w.at[rows, slot].set(
+        jnp.where(node_mask[:, None], w_new, cache.w[rows, slot]))
+    t = cache.t.at[rows, slot].set(
+        jnp.where(node_mask, t_new, cache.t[rows, slot]))
+    ptr = jnp.where(node_mask, cache.ptr + 1, cache.ptr)
+    count = jnp.where(node_mask, jnp.minimum(cache.count + 1, c), cache.count)
+    return ModelCache(w, t, ptr, count)
+
+
+def freshest(cache: ModelCache):
+    """``modelCache.freshest()`` — the most recently added model per node."""
+    n, c, d = cache.w.shape
+    rows = jnp.arange(n)
+    slot = (cache.ptr - 1) % c
+    return cache.w[rows, slot], cache.t[rows, slot]
+
+
+def predict_fresh(cache: ModelCache, X):
+    """PREDICT for every node over a test matrix X (m, d) -> (N, m) signs."""
+    w, _ = freshest(cache)                      # (N, d)
+    return jnp.where(X @ w.T >= 0, 1.0, -1.0).T
+
+
+def voted_predict(cache: ModelCache, X):
+    """VOTEDPREDICT (Algorithm 4): majority vote over the valid cache slots.
+
+    Returns (N, m) predictions for every node on test matrix X (m, d)."""
+    n, c, d = cache.w.shape
+    scores = jnp.einsum("ncd,md->ncm", cache.w, X)
+    votes = (scores >= 0).astype(jnp.float32)   # (N, C, m)
+    valid = (jnp.arange(c)[None, :] < cache.count[:, None]).astype(jnp.float32)
+    p_ratio = jnp.einsum("ncm,nc->nm", votes, valid) / cache.count[:, None]
+    return jnp.where(p_ratio - 0.5 >= 0, 1.0, -1.0)

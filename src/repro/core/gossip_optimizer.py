@@ -1,0 +1,243 @@
+"""Gossip-SGD: the paper's protocol as a datacenter training primitive.
+
+Each data-parallel replica is a *peer* holding its own (divergent) copy of
+the model. Instead of all-reducing gradients every step, a peer takes a
+local optimizer step and **averages parameters with one partner** chosen by
+a time-varying permutation — exactly CREATEMODELMU/UM (Algorithm 2) with a
+deterministic peer-sampling schedule:
+
+  MU:  params <- update( merge(params, partner(params)) )   (merge, then step)
+  UM:  params <- merge( update(params), update(partner) )   (step, then merge)
+  RW:  no merge (independent local SGD — the paper's baseline)
+
+Communication cost per step per peer = 1 model (one ppermute hop), vs
+2×model for ring all-reduce of gradients — the paper's 'one message per
+cycle' economy, measurable in the dry-run collective-bytes term.
+
+Implementation: pure pjit. Per-peer parameters are stacked on a leading
+'peers' dim sharded over the peer mesh axes ('data', or 'pod' for models
+that only fit one copy per pod); the merge is ``take(params, perm, axis=0)``
+which XLA lowers to a collective-permute over the peer axis. The loss is
+vmapped over (peer, per-peer batch), so compute is identical to plain data
+parallelism — only the cross-replica reduction changes, which is precisely
+the paper's intervention.
+
+Multi-pod hierarchy: with peers on the 'data' axis inside each pod, an
+additional cross-pod merge runs every ``pod_every`` steps (Section II's
+communication-cost hierarchy: slow links used 1/K as often).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import GossipConfig
+from repro.core.peer_sampling import partner_schedule
+from repro.optim.optimizers import Optimizer
+
+
+class GossipState(NamedTuple):
+    params: dict            # per-peer stacked params (peers, ...)
+    opt_state: dict         # per-peer stacked optimizer state
+    step: jnp.ndarray       # () int32
+
+
+def stack_for_peers(params, n_peers: int):
+    """Replicate params onto the peer axis: (…)-tree -> (peers, …)-tree."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_peers,) + p.shape),
+                        params)
+
+
+def unstack_mean(params):
+    """Consensus model: average over the peer axis (what the paper's nodes
+    would each converge to; used for eval/checkpointing)."""
+    return jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0), params)
+
+
+def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
+                 exchange_dtype=None):
+    """MERGE with the partner given by ``perm`` (symmetric pairing):
+    w_i <- (w_i + w_perm[i]) / 2.
+
+    ``perm`` must be a STATIC (numpy/tuple) index vector — the partner
+    schedule is compile-time data. With a mesh, the exchange is an honest
+    ``lax.ppermute`` over the peer axes inside a partial-manual
+    ``shard_map`` (non-peer dims stay auto-sharded). Without a mesh
+    (CPU tests / single device) it is a static-index take, which is
+    numerically identical.
+
+    Why not a traced ``jnp.take``: GSPMD cannot prove a traced gather is a
+    permutation and lowers it to a full all-gather of the params over the
+    peer axis — measured at 5.7 GB/device/step for qwen3-8b vs 0.03 GB for
+    the ppermute (EXPERIMENTS.md §Perf, gossip hillclimb).
+
+    ``exchange_dtype`` (beyond-paper): wire dtype for the exchanged model
+    (e.g. bf16) — the partner's contribution is quantized on the wire but
+    the average is taken in f32, halving the sync wire bytes."""
+    perm = np.asarray(perm)
+    pairs = [(s, int(perm[s])) for s in range(len(perm))]
+
+    def avg_take(p):
+        partner = p[perm]
+        if exchange_dtype is not None:
+            partner = partner.astype(exchange_dtype)
+        return ((p.astype(jnp.float32) + partner.astype(jnp.float32)) / 2.0).astype(p.dtype)
+
+    if mesh is None or not peer_axes:
+        return jax.tree.map(avg_take, params)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    psz = int(np.prod([sizes[a] for a in peer_axes]))
+    if psz == 1 or psz != len(perm):
+        return jax.tree.map(avg_take, params)
+
+    from jax.sharding import PartitionSpec as PS
+    axis = peer_axes if len(peer_axes) > 1 else peer_axes[0]
+
+    def body(tree):
+        def avg(x):
+            if exchange_dtype is None or x.dtype == exchange_dtype:
+                xin = jax.lax.ppermute(x, axis, pairs)
+            else:
+                # permute a bitcast integer view of the quantized value:
+                # a plain convert around the ppermute gets commuted back to
+                # the wide dtype by the algebraic simplifier (the wire-dtype
+                # saving would silently vanish); a bitcast is opaque to it.
+                xw = jax.lax.bitcast_convert_type(x.astype(exchange_dtype),
+                                                  jnp.uint16)
+                xin = jax.lax.bitcast_convert_type(
+                    jax.lax.ppermute(xw, axis, pairs), exchange_dtype)
+            return ((x.astype(jnp.float32) + xin.astype(jnp.float32)) / 2.0).astype(x.dtype)
+        return jax.tree.map(avg, tree)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=PS(axis), out_specs=PS(axis),
+                         axis_names=set(peer_axes), check_vma=False)(params)
+
+
+def peer_disagreement(params):
+    """Mean relative L2 distance of each peer from the consensus — the
+    model-similarity diagnostic of the paper's Fig. 2, for pytrees."""
+    mean = unstack_mean(params)
+    num = sum(jnp.sum(jnp.square(p.astype(jnp.float32) - m[None]))
+              for p, m in zip(jax.tree.leaves(params), jax.tree.leaves(mean)))
+    den = sum(p.shape[0] * jnp.sum(jnp.square(m.astype(jnp.float32)))
+              for p, m in zip(jax.tree.leaves(params), jax.tree.leaves(mean)))
+    return jnp.sqrt(num / jnp.maximum(den, 1e-12))
+
+
+def make_gossip_train_step(loss_fn: Callable, opt: Optimizer, n_peers: int,
+                           cfg: GossipConfig, *, spmd_axis: Optional[str] = None,
+                           mesh=None, peer_axes: Tuple[str, ...] = ()):
+    """Build the jittable gossip training step.
+
+    loss_fn(params, batch) -> (loss, metrics) for ONE peer;
+    the step takes stacked params (peers, …) and batch (peers, per_peer, …).
+    The partner permutation ``perm`` is STATIC (hashable tuple) — jit it
+    with ``static_argnums=2``; a schedule has only O(log peers) distinct
+    permutations, so the compile cache stays small, and the exchange lowers
+    to a true collective-permute (see :func:`gossip_merge`). ``spmd_axis``
+    names the mesh axis the peer dim is sharded over (vmap's
+    spmd_axis_name), so per-peer activation constraints compose with the
+    peer sharding.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    vmap_kw = {"spmd_axis_name": spmd_axis} if spmd_axis else {}
+    xdt = {"bf16": jnp.bfloat16, "f16": jnp.float16}.get(cfg.exchange_dtype)
+    merge_kw = dict(mesh=mesh, exchange_dtype=xdt,
+                    peer_axes=peer_axes or
+                    ((spmd_axis,) if spmd_axis and mesh is not None else ()))
+
+    def local_update(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.vmap(grad_fn, **vmap_kw)(params, batch)
+        # optimizers are element-wise -> broadcast over the peer axis;
+        # the step counter is shared.
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, loss.mean(), metrics
+
+    def train_step(state: GossipState, batch, perm, pod_perm=None):
+        params, opt_state = state.params, state.opt_state
+        if cfg.merge == "mu":
+            params = gossip_merge(params, perm, **merge_kw)
+        params, opt_state, loss, metrics = local_update(
+            params, opt_state, batch, state.step)
+        if cfg.merge == "um":
+            params = gossip_merge(params, perm, **merge_kw)
+        if pod_perm is not None:
+            params = gossip_merge(params, pod_perm, **merge_kw)
+        return GossipState(params, opt_state, state.step + 1), loss, metrics
+
+    return train_step
+
+
+def make_allreduce_train_step(loss_fn: Callable, opt: Optimizer):
+    """Baseline: conventional data parallelism. Params carry NO peer dim;
+    the batch keeps its global leading dim and XLA inserts the gradient
+    all-reduce via sharding propagation."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, loss, metrics
+
+    return train_step
+
+
+def perms_for_step(cfg: GossipConfig, step: int, n_peers: int,
+                   n_pods: int = 1) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Host-side partner permutations for a given step (passed as args)."""
+    perm = partner_schedule(cfg.schedule, step, n_peers, cfg.seed)
+    pod_perm = None
+    if n_pods > 1 and cfg.pod_every > 0 and (step + 1) % cfg.pod_every == 0:
+        # pair each peer with the same peer index in the partner pod:
+        # global peer id = pod * peers_per_pod + local
+        per_pod = n_peers // n_pods
+        pods = partner_schedule("hypercube", step // cfg.pod_every, n_pods, cfg.seed)
+        pod_perm = np.concatenate([pods[p] * per_pod + np.arange(per_pod)
+                                   for p in range(n_pods)])
+    return perm, pod_perm
+
+
+# ---------------------------------------------------------------------------
+# shard_map runtime for the paper's linear models (peers == devices)
+# ---------------------------------------------------------------------------
+
+
+def linear_gossip_mesh_step(w, t, X_local, y_local, perm, *, lam: float,
+                            variant: str, axis: str = "data",
+                            drop_mask=None):
+    """One gossip cycle with peers = mesh devices, inside ``shard_map``.
+
+    w: (d,) per-device model, t: () counter, (X_local, y_local): this peer's
+    data shard (the fully-distributed limit is one record). ``perm`` pairs
+    of (src, dst) for ``lax.ppermute`` over ``axis``. ``drop_mask`` (bool)
+    simulates the paper's message-drop failures on-mesh."""
+    from repro.core.learners import LinearModel, pegasos_update
+
+    def merge_with_partner(w, t):
+        w_in = jax.lax.ppermute(w, axis, perm)
+        t_in = jax.lax.ppermute(t, axis, perm)
+        if drop_mask is not None:
+            w_in = jnp.where(drop_mask, w, w_in)
+            t_in = jnp.where(drop_mask, t, t_in)
+        return (w + w_in) / 2.0, jnp.maximum(t, t_in)
+
+    def update(w, t):
+        m = LinearModel(w, t)
+        i = t % X_local.shape[0]
+        m = pegasos_update(m, X_local[i], y_local[i], lam)
+        return m.w, m.t
+
+    if variant == "mu":
+        w, t = merge_with_partner(w, t)
+        w, t = update(w, t)
+    elif variant == "um":
+        w, t = update(w, t)
+        w, t = merge_with_partner(w, t)
+    else:  # rw
+        w, t = update(w, t)
+    return w, t

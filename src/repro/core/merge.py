@@ -1,0 +1,48 @@
+"""MERGE and the three CREATEMODEL variants (Algorithm 2 + Algorithm 3).
+
+MERGE averages parameters and takes the max step counter — for linear
+hypothesis spaces this implements the *virtual weighted voting over an
+exponential number of models* (Section V): averaging the parameters equals
+weighted voting with weights |<w, x>| (Eq. 7), so each transmitted model
+stands for the entire merge-DAG of its ancestors at constant message size.
+"""
+from __future__ import annotations
+
+from repro.core.learners import LinearModel
+
+import jax.numpy as jnp
+
+
+def merge(m1: LinearModel, m2: LinearModel) -> LinearModel:
+    """MERGE (Algorithm 3, lines 22–26): w = (w1+w2)/2, t = max(t1,t2)."""
+    return LinearModel((m1.w + m2.w) / 2.0, jnp.maximum(m1.t, m2.t))
+
+
+def create_model_rw(update, m1: LinearModel, m2: LinearModel, x, y) -> LinearModel:
+    """CREATEMODELRW: independent random walk — update(m1)."""
+    del m2
+    return update(m1, x, y)
+
+
+def create_model_mu(update, m1: LinearModel, m2: LinearModel, x, y) -> LinearModel:
+    """CREATEMODELMU: merge, then update — update(merge(m1, m2)).
+
+    The favored variant: the two incoming edges of each merge node in the
+    history DAG were updated with *independent* samples (Section V-B)."""
+    return update(merge(m1, m2), x, y)
+
+
+def create_model_um(update, m1: LinearModel, m2: LinearModel, x, y) -> LinearModel:
+    """CREATEMODELUM: update both with the local example, then merge."""
+    return merge(update(m1, x, y), update(m2, x, y))
+
+
+VARIANTS = {
+    "rw": create_model_rw,
+    "mu": create_model_mu,
+    "um": create_model_um,
+}
+
+
+def create_model(variant: str, update, m1, m2, x, y) -> LinearModel:
+    return VARIANTS[variant](update, m1, m2, x, y)

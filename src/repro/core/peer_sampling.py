@@ -1,0 +1,66 @@
+"""Peer sampling (Section III-c): uniform gossip sampling + baselines.
+
+* ``uniform``  — each node draws an i.i.d. uniform peer (≠ self): the
+  NEWSCAST abstraction the paper assumes (samples available locally, no
+  extra messages — NEWSCAST descriptors piggyback the model messages).
+* ``matching`` — the PERFECT MATCHING baseline (Section VI-A.e): a random
+  perfect matching so every node receives exactly one message per cycle.
+* ``hypercube`` / ``ring`` — deterministic schedules used by the on-mesh
+  gossip optimizer (Layer B), where collectives need compile-time partner
+  graphs; hypercube mixes the population in log2(N) rounds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def uniform_peers(key, n: int):
+    """dst[i] ~ Uniform({0..n-1} \\ {i})."""
+    r = jax.random.randint(key, (n,), 0, n - 1)
+    idx = jnp.arange(n)
+    return jnp.where(r >= idx, r + 1, r)
+
+
+def perfect_matching(key, n: int):
+    """Random involution without fixed points (n even): pairs exchange."""
+    perm = jax.random.permutation(key, n)
+    # pair consecutive elements of the random permutation
+    a, b = perm[0::2], perm[1::2]
+    dst = jnp.zeros((n,), jnp.int32).at[a].set(b).at[b].set(a)
+    return dst
+
+
+def hypercube_partner(step: int, n: int):
+    """partner = rank XOR 2^(step mod log2(n)). Requires n a power of two."""
+    bits = int(np.log2(n))
+    assert 1 << bits == n, f"hypercube needs power-of-two population, got {n}"
+    return np.arange(n) ^ (1 << (step % bits))
+
+
+def ring_partner(step: int, n: int):
+    """Alternating ±1 ring neighbors (one ICI hop on a torus)."""
+    shift = 1 if step % 2 == 0 else -1
+    return (np.arange(n) + shift) % n
+
+
+def random_permutation_partner(seed: int, step: int, n: int):
+    """PRNG-derived pairing (closest to the paper's uniform sampling that is
+    still a compile-time-known permutation for ``ppermute``)."""
+    rng = np.random.default_rng((seed, step))
+    perm = rng.permutation(n)
+    dst = np.empty(n, dtype=np.int64)
+    a, b = perm[0::2], perm[1::2]
+    dst[a], dst[b] = b, a
+    return dst
+
+
+def partner_schedule(kind: str, step: int, n: int, seed: int = 0):
+    if kind == "hypercube":
+        return hypercube_partner(step, n)
+    if kind == "ring":
+        return ring_partner(step, n)
+    if kind == "random":
+        return random_permutation_partner(seed, step, n)
+    raise ValueError(f"unknown schedule {kind!r}")

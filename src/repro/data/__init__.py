@@ -1,0 +1,5 @@
+from repro.data.synthetic import make_linear_dataset, paper_dataset
+from repro.data.lm_data import synthetic_lm_batches, SyntheticLMDataset
+
+__all__ = ["make_linear_dataset", "paper_dataset", "synthetic_lm_batches",
+           "SyntheticLMDataset"]

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blocked causal/GQA/sliding-window flash attention.
+
+Online-softmax forward over (BLK_Q × BLK_K) tiles with f32 VMEM scratch for
+the running max / normalizer / accumulator. TPU adaptation choices:
+
+* tiles default to 128×128 — MXU-aligned on both matmul dims, and the
+  (8, 128) VREG layout divides every tile;
+* the running statistics live in VMEM scratch across the innermost KV grid
+  dimension (TPU grid iteration is sequential, so no atomics are needed —
+  this replaces the GPU warp-level reduction idiom);
+* GQA is handled in the BlockSpec index maps (query-head row -> shared KV
+  row), so KV tiles are fetched once per q-head group, not replicated in HBM;
+* causal and sliding-window blocks that are fully masked are skipped with
+  ``pl.when`` — the compiler still schedules the grid, but no FLOPs or VMEM
+  loads are issued for them (block-sparsity the way TPU prefers it).
+
+Backward pass is left to XLA autodiff of the reference path; the kernel is
+exposed for the forward/serving path (``attn_impl='pallas'``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, blk_q: int, blk_k: int,
+                  n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_start <= q_start + blk_q - 1
+    if window is not None:
+        relevant &= k_start + blk_k - 1 >= q_start - (window - 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (blk_q, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (blk_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        diff = qpos - kpos
+        mask = jnp.ones((blk_q, blk_k), bool)
+        if causal:
+            mask &= diff >= 0
+        if window is not None:
+            mask &= diff < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+        acc_scr[...] = alpha[:, None] * acc_scr[...] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    blk_q: int = DEFAULT_BLK_Q, blk_k: int = DEFAULT_BLK_K,
+                    interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd), H % KV == 0 -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    scale = 1.0 / float(hd) ** 0.5
+
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    s_pad = (-S) % max(blk_q, blk_k)
+    hd_pad = (-hd) % 128
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, hd)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, hd)
+    if s_pad or hd_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, s_pad), (0, hd_pad)))
+        kt = jnp.pad(kt, ((0, 0), (0, s_pad), (0, hd_pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, s_pad), (0, hd_pad)))
+    sp = S + s_pad
+    hdp = hd + hd_pad
+    n_q, n_k = sp // blk_q, sp // blk_k
+
+    def q_map(b, qi, ki):
+        return (b, qi, 0)
+
+    def kv_map(b, qi, ki):
+        return ((b // H) * KV + (b % H) // rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, blk_q=blk_q, blk_k=blk_k, n_k=n_k),
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hdp), q_map),
+            pl.BlockSpec((1, blk_k, hdp), kv_map),
+            pl.BlockSpec((1, blk_k, hdp), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hdp), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, sp, hdp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, hdp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :S, :hd].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

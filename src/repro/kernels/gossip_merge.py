@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused MERGE + Pegasos update — the MU hot path.
+
+CREATEMODELMU (Algorithm 2) is ``update(merge(m1, m2))``: executed naively
+that is two full passes over the model vectors (average; then update). The
+kernel fuses both into one VMEM-resident pass: HBM traffic drops from
+(4 reads + 2 writes) to (3 reads + 1 write) per model pair — a 1.5× cut on
+the bandwidth-bound protocol step. t = max(t1, t2) + 1 is carried along.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pegasos_update import BLK_N, LANE, _pad_to
+
+
+def _merge_update_kernel(w1_ref, t1_ref, w2_ref, t2_ref, x_ref, y_ref,
+                         w_out, t_out, *, lam: float):
+    w = (w1_ref[...].astype(jnp.float32) + w2_ref[...].astype(jnp.float32)) / 2.0
+    t = jnp.maximum(t1_ref[...], t2_ref[...]) + 1
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+
+    eta = 1.0 / (lam * t.astype(jnp.float32))
+    margin = y * jnp.sum(w * x, axis=-1)
+    decay = (1.0 - eta * lam)[:, None]
+    upd = jnp.where((margin < 1.0)[:, None], (eta * y)[:, None] * x, 0.0)
+    w_out[...] = (decay * w + upd).astype(w_out.dtype)
+    t_out[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
+def merge_update(w1, t1, w2, t2, x, y, *, lam: float, interpret: bool = False):
+    """Fused update(merge((w1,t1), (w2,t2))) with local example (x, y)."""
+    n, d = w1.shape
+    pads = lambda a: _pad_to(_pad_to(a, LANE, 1), BLK_N, 0)
+    pad1 = lambda a: _pad_to(a, BLK_N, 0)
+    w1p, w2p, xp = pads(w1), pads(w2), pads(x)
+    t1p, t2p, yp = pad1(t1), pad1(t2), pad1(y)
+    np_, dp = w1p.shape
+    grid = (np_ // BLK_N,)
+    vec = lambda: pl.BlockSpec((BLK_N, dp), lambda i: (i, 0))
+    sca = lambda: pl.BlockSpec((BLK_N,), lambda i: (i,))
+
+    w_new, t_new = pl.pallas_call(
+        functools.partial(_merge_update_kernel, lam=lam),
+        grid=grid,
+        in_specs=[vec(), sca(), vec(), sca(), vec(), sca()],
+        out_specs=[vec(), sca()],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, dp), w1.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w1p, t1p, w2p, t2p, xp, yp)
+    return w_new[:n, :d], t_new[:n]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pegasos_update_ref(w, t, x, y, lam: float):
+    """Population Pegasos step. w,x: (N, d); t: (N,); y: (N,)."""
+    t_new = t + 1
+    eta = 1.0 / (lam * t_new.astype(jnp.float32))
+    margin = y * jnp.sum(w * x, axis=-1)
+    decay = (1.0 - eta * lam)[:, None]
+    upd = jnp.where((margin < 1.0)[:, None], (eta * y)[:, None] * x, 0.0)
+    return decay * w + upd, t_new
+
+
+def merge_update_ref(w1, t1, w2, t2, x, y, lam: float):
+    """Fused MU hot path: Pegasos-update(merge(m1, m2)) (Algorithms 2+3)."""
+    w = (w1 + w2) / 2.0
+    t = jnp.maximum(t1, t2)
+    return pegasos_update_ref(w, t, x, y, lam)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None):
+    """Masked softmax attention with GQA.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    Returns (B, Sq, H, hd) in q.dtype; softmax in f32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    offset = k.shape[1] - Sq  # decode-style alignment when Sk > Sq
+    diff = (qpos + offset) - kpos
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Finite-difference roofline costing.
+
+``compiled.cost_analysis()`` (and a line-wise HLO collective parse) count a
+``while``-loop body ONCE, so a layer-scanned model under-reports FLOPs /
+bytes / collective bytes by ~num_layers×. Rather than trust loop-trip
+heuristics, we compile two *fully unrolled* shallow variants of the same
+architecture — depth = 1 and 2 pattern periods, with the inner scans
+(chunked attention, chunked xent) also disabled so the HLO is loop-free —
+and extrapolate linearly in depth:
+
+    cost(L) = c1 + (c2 - c1) / p · (L - p)
+
+Exact for everything that is per-layer (all layer matmuls, FSDP
+all-gathers, TP all-reduces, MoE all-to-alls) and for everything that is
+depth-independent (embedding, xent, gradient reduction of the head) — the
+two classes the linear model separates by construction. Whisper's encoder
+tower is depth-constant here (its own layers unroll identically in both
+compiles), so it lands in c1's constant term, also exact.
+
+The *full-depth* compile (launch/dryrun.py) remains the proof that the real
+scanned program lowers, fits, and schedules collectives; this module only
+supplies the roofline numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.config.base import InputShape, ModelConfig
+from repro.launch import roofline as RL
+from repro.launch.mesh import num_chips
+from repro.launch.specs import build_step, resolve_variant
+
+
+def _unrolled(cfg: ModelConfig, periods: int) -> ModelConfig:
+    p = len(cfg.layer_pattern)
+    # loop-free HLO for honest op counting: full attention -> 'xla' (single
+    # masked block); sliding-window -> 'banded' (static query blocks with
+    # statically sliced key spans — counts S*(window+chunk), matching the
+    # windowed chunked runtime path, not the masked full S^2)
+    windowed = cfg.attention is not None and (
+        cfg.attention.sliding_window is not None
+        or any(k == "local" for k in cfg.layer_pattern))
+    impl = "banded" if windowed else "xla"
+    return cfg.replace(
+        num_layers=periods * p,
+        scan_layers=False,
+        attn_impl=impl if cfg.attn_impl == "chunked" else cfg.attn_impl,
+        xent_chunk=1 << 30,          # disable the xent scan
+        remat=cfg.remat,             # checkpoint recompute stays, statically inlined
+    )
+
+
+def _measure(cfg: ModelConfig, shape: InputShape, mesh, *, dist: str,
+             optimizer: str, decode_profile: str = "context") -> Dict[str, float]:
+    fn, arg_sds, in_sh, _ = build_step(cfg, shape, mesh, dist=dist,
+                                       optimizer=optimizer,
+                                       decode_profile=decode_profile)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*arg_sds).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = RL.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_operand": float(coll.total_operand_bytes),
+        "coll_wire": float(coll.wire_bytes),
+        "coll_per_op": dict(coll.per_op),
+        "coll_counts": dict(coll.count),
+    }
+
+
+def fd_roofline(cfg: ModelConfig, shape: InputShape, mesh, *,
+                dist: str = "allreduce", optimizer: str = "adamw",
+                decode_profile: str = "context") -> RL.Roofline:
+    """Depth-extrapolated roofline for the full-depth config."""
+    vcfg, _ = resolve_variant(cfg, shape)
+    p = len(vcfg.layer_pattern)
+    L = vcfg.num_layers
+    c1 = _measure(_unrolled(vcfg, 1), shape, mesh, dist=dist, optimizer=optimizer,
+                  decode_profile=decode_profile)
+    c2 = _measure(_unrolled(vcfg, 2), shape, mesh, dist=dist, optimizer=optimizer,
+                  decode_profile=decode_profile)
+
+    def extrap(key):
+        slope = (c2[key] - c1[key]) / p
+        return max(c1[key] + slope * (L - p), 0.0)
+
+    flops = extrap("flops")
+    bytes_ = extrap("bytes")
+    wire = extrap("coll_wire")
+    operand = extrap("coll_operand")
+    per_op = {k: int(max(c1["coll_per_op"].get(k, 0)
+                         + (c2["coll_per_op"].get(k, 0)
+                            - c1["coll_per_op"].get(k, 0)) / p * (L - p), 0))
+              for k in set(c1["coll_per_op"]) | set(c2["coll_per_op"])}
+    counts = {k: int(max(c1["coll_counts"].get(k, 0)
+                         + (c2["coll_counts"].get(k, 0)
+                            - c1["coll_counts"].get(k, 0)) / p * (L - p), 0))
+              for k in set(c1["coll_counts"]) | set(c2["coll_counts"])}
+
+    chips = num_chips(mesh)
+    mf = RL.model_flops_for(vcfg, shape)
+    compute_s = flops / RL.PEAK_FLOPS_BF16
+    memory_s = bytes_ / RL.HBM_BW
+    collective_s = wire / RL.ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    return RL.Roofline(
+        flops_per_device=flops, bytes_per_device=bytes_,
+        collective_bytes_per_device=operand, wire_bytes_per_device=wire,
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=max(terms, key=terms.get),
+        model_flops=mf, useful_ratio=mf / (flops * chips) if flops else 0.0,
+        collectives=per_op, collective_counts=counts,
+    )

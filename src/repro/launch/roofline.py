@@ -1,0 +1,161 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (per-step):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` on an SPMD executable reports *per-device* flops/bytes,
+so we scale by ``chips`` to get the global quantities before applying the
+formulas (net effect: per-device quantity / per-chip peak — the physically
+meaningful number).
+
+collective_bytes is NOT in cost_analysis: we parse the compiled HLO and sum
+the **operand** sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Result shapes are printed per-device; we
+recover operand sizes per op semantics (all-gather operand = result/G,
+reduce-scatter operand = result×G, G = replica-group size).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# result-typed collective ops:  %name = TYPE[shape] op-name(
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    per_op: Dict[str, int] = field(default_factory=dict)      # op -> operand bytes
+    count: Dict[str, int] = field(default_factory=dict)
+    total_operand_bytes: int = 0                              # per device
+    wire_bytes: int = 0                                       # per device, algo-aware
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device operand bytes of every collective in an HLO module."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:   # the -start op already counted the bytes
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        res = _shape_bytes(dtype, dims)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if op == "all-gather":
+            operand = res // max(g, 1)
+            wire = res - operand                     # receives G-1 shards
+        elif op == "reduce-scatter":
+            operand = res * g
+            wire = res * (g - 1)
+        elif op == "all-reduce":
+            operand = res
+            wire = 2 * res * (g - 1) // max(g, 1)    # ring: reduce-scatter + all-gather
+        else:                                        # all-to-all, collective-permute
+            operand = res
+            wire = res
+        st.per_op[op] = st.per_op.get(op, 0) + operand
+        st.count[op] = st.count.get(op, 0) + 1
+        st.total_operand_bytes += operand
+        st.wire_bytes += wire
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    wire_bytes_per_device: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+
+
+def analyze(compiled, *, chips: int, model_flops: float = 0.0,
+            hlo_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll.wire_bytes / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / (flops * chips) if flops > 0 else 0.0
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        collective_bytes_per_device=float(coll.total_operand_bytes),
+        wire_bytes_per_device=float(coll.wire_bytes),
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        collectives=coll.per_op,
+        collective_counts=coll.count,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per step.
+
+    D = tokens processed: global_batch×seq for train/prefill, global_batch
+    for one decode step. Train counts fwd+bwd (the 6); inference counts 2·N·D."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,359 @@
+"""input_specs() + step builders for the dry-run / trainer / server.
+
+Everything here works on ``ShapeDtypeStruct`` stand-ins: weak-type-correct,
+shardable, and never allocating — 405B-scale params and half-terabyte KV
+caches stay abstract through ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.config.base import (GossipConfig, InputShape, ModelConfig,
+                               INPUT_SHAPES)
+from repro.core.gossip_optimizer import (make_allreduce_train_step,
+                                         make_gossip_train_step)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import make_optimizer, warmup_cosine
+from repro.sharding import cache_pspecs, default_rules, params_pspecs
+from repro.sharding.act import activation_sharding
+
+LONG_WINDOW = 8192          # SWA window for dense archs on long_500k
+
+
+# ---------------------------------------------------------------------------
+# workload-variant resolution
+# ---------------------------------------------------------------------------
+
+
+def resolve_variant(cfg: ModelConfig, shape: InputShape) -> Tuple[ModelConfig, Dict]:
+    """Adapt a config to a workload shape; returns (cfg, notes).
+
+    * long_500k on full-attention archs -> sliding-window variant (the
+      sub-quadratic requirement); natively windowed/SSM archs unchanged.
+    * whisper: long_500k unsupported (documented skip); decode self-cache
+      capped at max_target_positions.
+    """
+    notes: Dict = {}
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            raise ValueError("long_500k x whisper: documented skip (DESIGN.md)")
+        a = cfg.attention
+        if a is not None and a.sliding_window is None:
+            has_global_attn = any(k in ("attn", "cross", "selfcross")
+                                  for k in cfg.layer_pattern)
+            if has_global_attn:
+                cfg = cfg.replace(
+                    attention=dataclasses.replace(a, sliding_window=LONG_WINDOW))
+                notes["attn"] = f"swa{LONG_WINDOW}"
+    if cfg.family == "audio" and shape.kind == "decode":
+        notes["self_cache"] = f"capped at {cfg.max_target_positions} target positions"
+    return cfg, notes
+
+
+def needs_encoder_input(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+def encoder_input_sds(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.cross_attn.source_len, cfg.d_model), cfg.compute_dtype)
+    d = cfg.encoder.d_model or cfg.d_model
+    return jax.ShapeDtypeStruct((batch, cfg.encoder.source_len, d),
+                                cfg.compute_dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                n_peers: int = 0) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if n_peers:
+            assert gb % n_peers == 0
+            tok = jax.ShapeDtypeStruct((n_peers, gb // n_peers, s), jnp.int32)
+        else:
+            tok = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+        out = {"tokens": tok, "labels": tok}
+        if needs_encoder_input(cfg):
+            if n_peers:
+                e = encoder_input_sds(cfg, gb // n_peers)
+                out["encoder_out"] = jax.ShapeDtypeStruct((n_peers,) + e.shape, e.dtype)
+            else:
+                out["encoder_out"] = encoder_input_sds(cfg, gb)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+        if needs_encoder_input(cfg):
+            out["encoder_out"] = encoder_input_sds(cfg, gb)
+        return out
+    # decode: ONE new token + the KV/state cache of seq_len positions
+    out = {
+        "token": jax.ShapeDtypeStruct((gb,), jnp.int32),
+        "cache": T.cache_spec(cfg, gb, s),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution
+# ---------------------------------------------------------------------------
+
+
+def _batch_spec(mesh, ndim: int, *, peer: bool = False,
+                peer_axes: Tuple[str, ...] = ()):
+    multi = "pod" in mesh.axis_names
+    if peer:
+        rest = tuple(a for a in (("pod", "data") if multi else ("data",))
+                     if a not in peer_axes)
+        second = rest[0] if rest else None
+        return PS(peer_axes if len(peer_axes) > 1 else peer_axes[0], second,
+                  *([None] * (ndim - 2)))
+    bx = ("pod", "data") if multi else "data"
+    return PS(bx, *([None] * (ndim - 1)))
+
+
+def shardings_for(cfg: ModelConfig, mesh, *, gossip: Optional[GossipConfig] = None,
+                  peer_axes: Tuple[str, ...] = ("data",), inference: bool = False):
+    """(params_pspecs, rules) for this config on this mesh."""
+    multi = "pod" in mesh.axis_names
+    moe_mode = cfg.moe.sharding if cfg.moe else "expert"
+    if gossip is not None:
+        rules = default_rules(multi_pod=multi, fsdp=True,
+                              moe_sharding=moe_mode, peer_axes=peer_axes)
+    else:
+        rules = default_rules(multi_pod=multi, fsdp=True, moe_sharding=moe_mode,
+                              inference=inference)
+    spec = T.model_spec(cfg)
+    axes = L.spec_axes(spec)
+    sds = L.abstract_params(spec)
+    pspecs = params_pspecs(axes, sds, mesh, rules)
+    if gossip is not None:
+        # prepend the peer axis to every leaf spec
+        def add_peer(ps):
+            return PS(peer_axes if len(peer_axes) > 1 else peer_axes[0], *ps)
+        pspecs = jax.tree.map(add_peer, pspecs, is_leaf=lambda x: isinstance(x, PS))
+    return pspecs, rules
+
+
+def _stack_sds(tree, n):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# step builders (train / prefill / decode), all returning
+# (fn, arg_sds: tuple, in_shardings: tuple)
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        enc = batch.get("encoder_out")
+        return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                         encoder_out=enc)
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+                     optimizer: str = "adamw",
+                     gossip: Optional[GossipConfig] = None,
+                     n_peers: int = 0, lr: float = 3e-4):
+    sched = warmup_cosine(lr, 100, 10_000)
+    opt = make_optimizer(optimizer, sched)
+    loss_fn = make_loss_fn(cfg)
+
+    params_sds = T.abstract_params(cfg)
+    if gossip is not None:
+        params_sds = _stack_sds(params_sds, n_peers)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    batch_sds = input_specs(cfg, shape, n_peers=n_peers if gossip else 0)
+
+    peer_axes = ("data",)
+    pspecs, _ = shardings_for(cfg, mesh, gossip=gossip, peer_axes=peer_axes)
+    ns = lambda tree: jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree,
+                                   is_leaf=lambda x: isinstance(x, PS))
+    params_sh = ns(pspecs)
+    opt_sh = jax.tree.map(
+        lambda s: params_sh, {k: None for k in opt_sds}) if opt_sds else {}
+    # opt state mirrors the params tree per top-level slot ("m"/"v")
+    opt_sh = {k: params_sh for k in opt_sds}
+
+    def batch_sharding(sds_tree):
+        def one(sds):
+            if gossip is not None:
+                return NamedSharding(mesh, _batch_spec(mesh, len(sds.shape),
+                                                       peer=True,
+                                                       peer_axes=peer_axes))
+            return NamedSharding(mesh, _batch_spec(mesh, len(sds.shape)))
+        return jax.tree.map(one, sds_tree)
+
+    batch_sh = batch_sharding(batch_sds)
+    rep = NamedSharding(mesh, PS())
+
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+
+    if gossip is not None:
+        g_step = make_gossip_train_step(loss_fn, opt, n_peers, gossip,
+                                        spmd_axis="data", mesh=mesh,
+                                        peer_axes=peer_axes)
+        # the partner permutation is STATIC (compile-time schedule) so the
+        # exchange lowers to a collective-permute, not a gathered take();
+        # lower with the round-0 hypercube pairing as the representative —
+        # every round of the schedule has identical cost structure.
+        from repro.core.gossip_optimizer import perms_for_step
+        perm0, _ = perms_for_step(gossip, 0, n_peers)
+
+        def step(params, opt_state, step_idx, batch):
+            from repro.core.gossip_optimizer import GossipState
+            # per-peer batch is replicated within the peer's device group;
+            # the peer dim itself is handled by vmap(spmd_axis_name='data')
+            with activation_sharding(mesh, ()):
+                st, loss, _ = g_step(GossipState(params, opt_state, step_idx),
+                                     batch, perm0)
+            return st.params, st.opt_state, st.step, loss
+
+        arg_sds = (params_sds, opt_sds, step_sds, batch_sds)
+        in_sh = (params_sh, opt_sh, rep, batch_sh)
+        return step, arg_sds, in_sh
+
+    a_step = make_allreduce_train_step(loss_fn, opt)
+
+    def step(params, opt_state, step_idx, batch):
+        with activation_sharding(mesh, batch_axes):
+            new_p, new_o, loss, _ = a_step(params, opt_state, batch, step_idx)
+        return new_p, new_o, step_idx + 1, loss
+
+    arg_sds = (params_sds, opt_sds, step_sds, batch_sds)
+    in_sh = (params_sh, opt_sh, rep, batch_sh)
+    return step, arg_sds, in_sh
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape, mesh):
+    params_sds = T.abstract_params(cfg)
+    pspecs, _ = shardings_for(cfg, mesh)
+    params_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                             is_leaf=lambda x: isinstance(x, PS))
+    batch_sds = input_specs(cfg, shape)
+    batch_sh = jax.tree.map(
+        lambda sds: NamedSharding(mesh, _batch_spec(mesh, len(sds.shape))),
+        batch_sds)
+
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+
+    def step(params, batch):
+        # realistic prefill output: next-token logits only (the KV cache
+        # emission is the decode path's input; see EXPERIMENTS.md §Dry-run)
+        with activation_sharding(mesh, batch_axes):
+            logits, _ = T.forward(params, cfg, batch["tokens"],
+                                  encoder_out=batch.get("encoder_out"),
+                                  last_only=True)
+        return logits
+
+    return step, (params_sds, batch_sds), (params_sh, batch_sh)
+
+
+def build_decode_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+                      profile: str = "context"):
+    """Decode step builder.
+
+    profile='context' (default; EXPERIMENTS.md §Perf decode hillclimb):
+      * KV caches sharded along the *length* dim over 'data'
+        (context-parallel decode — the attention softmax/contraction over
+        the sharded length lowers to small activation psums);
+      * the token batch and activations replicated over 'data', so the
+        FSDP-sharded weights are consumed *in place* (partial matmuls +
+        activation psums) instead of being re-all-gathered every token;
+      * serving weights in the compute dtype (bf16), not the f32 training
+        master copy (halves HBM and any remaining gather bytes).
+    profile='batch' reproduces the v0 baseline (batch-sharded cache,
+    f32 weights, per-token weight all-gathers).
+    """
+    multi = "pod" in mesh.axis_names
+    params_sds = T.abstract_params(cfg)
+    if profile == "context":
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, cfg.compute_dtype if s.dtype == jnp.float32 else s.dtype),
+            params_sds)
+    # NOTE: inference=True (2D weight sharding) was tried and REFUTED — it
+    # introduces cache/attention resharding conflicts that cost more than
+    # the remaining weight traffic (EXPERIMENTS.md §Perf decode iter 3).
+    pspecs, _ = shardings_for(cfg, mesh, inference=(profile == "tp2d"))
+    params_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                             is_leaf=lambda x: isinstance(x, PS))
+    specs = input_specs(cfg, shape)
+    cache_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                            cache_pspecs(specs["cache"], mesh, multi_pod=multi,
+                                         profile=profile),
+                            is_leaf=lambda x: isinstance(x, PS))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bx = ("pod", "data") if multi else ("data",)
+    bsz = int(np.prod([sizes[a] for a in bx]))
+    gb = specs["token"].shape[0]
+    if profile == "context":
+        tok_spec = PS()
+        dec_batch_axes = ()
+    else:
+        tok_spec = PS(bx if multi else "data") if gb % bsz == 0 else PS()
+        dec_batch_axes = bx if gb % bsz == 0 else ()
+    tok_sh = NamedSharding(mesh, tok_spec)
+    rep = NamedSharding(mesh, PS())
+
+    def step(params, token, cache, index):
+        with activation_sharding(mesh, dec_batch_axes):
+            return T.decode_step(params, cfg, token, cache, index)
+
+    arg_sds = (params_sds, specs["token"], specs["cache"], specs["index"])
+    in_sh = (params_sh, tok_sh, cache_sh, rep)
+    return step, arg_sds, in_sh
+
+
+def _with_dispatch_groups(cfg: ModelConfig, shape: InputShape, mesh) -> ModelConfig:
+    """Set the MoE grouped-dispatch count to the batch-shard size, so each
+    data shard owns its (E, C_group, D) buffer (see models/moe.py)."""
+    if cfg.moe is None or cfg.moe.dispatch_groups != 1:
+        return cfg
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bx = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bsz = int(np.prod([sizes[a] for a in bx]))
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill") else 1)
+    combine = "reduce" if cfg.moe.sharding == "tensor" else cfg.moe.combine
+    if bsz > 1 and shape.global_batch % bsz == 0 and tokens % bsz == 0:
+        return cfg.replace(moe=dataclasses.replace(
+            cfg.moe, dispatch_groups=bsz, combine=combine))
+    return cfg
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *, dist: str = "allreduce",
+               n_peers: int = 0, optimizer: str = "adamw",
+               decode_profile: str = "context"):
+    """Dispatch on workload kind; returns (fn, arg_sds, in_shardings, notes)."""
+    cfg, notes = resolve_variant(cfg, shape)
+    cfg = _with_dispatch_groups(cfg, shape, mesh)
+    if cfg.moe is not None and cfg.moe.dispatch_groups > 1:
+        notes["moe"] = f"grouped-dispatch G={cfg.moe.dispatch_groups}"
+    if shape.kind == "train":
+        gossip = GossipConfig() if dist == "gossip" else None
+        if dist == "gossip" and n_peers == 0:
+            n_peers = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+        fn, sds, sh = build_train_step(cfg, shape, mesh, optimizer=optimizer,
+                                       gossip=gossip, n_peers=n_peers)
+    elif shape.kind == "prefill":
+        fn, sds, sh = build_prefill_step(cfg, shape, mesh)
+    else:
+        fn, sds, sh = build_decode_step(cfg, shape, mesh,
+                                        profile=decode_profile)
+        notes["decode"] = decode_profile
+    return fn, sds, sh, notes

@@ -1,0 +1,18 @@
+from repro.models import attention, encdec, layers, moe, rglru, ssm, transformer, vision
+from repro.models.transformer import (
+    model_spec,
+    init_params,
+    abstract_params,
+    param_axes,
+    forward,
+    lm_loss,
+    decode_step,
+    cache_spec,
+    init_cache,
+)
+
+__all__ = [
+    "attention", "encdec", "layers", "moe", "rglru", "ssm", "transformer",
+    "vision", "model_spec", "init_params", "abstract_params", "param_axes",
+    "forward", "lm_loss", "decode_step", "cache_spec", "init_cache",
+]

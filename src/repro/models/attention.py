@@ -1,0 +1,323 @@
+"""GQA attention with RoPE, qk-norm, sliding windows, cross-attention, KV cache.
+
+Train/prefill path: full-sequence attention (XLA einsum or the Pallas flash
+kernel). Decode path: one new token against a (possibly ring-buffered) KV
+cache — the ``serve_step`` shape required by the decode workloads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionConfig
+from repro.models.layers import P, rmsnorm, rmsnorm_spec, wcast
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                         # (..., S, 1, hd/2)
+    sin = sin[..., :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(d_model: int, a: AttentionConfig, dtype=jnp.float32) -> Dict:
+    s = {
+        "wq": P((d_model, a.num_heads, a.head_dim), ("embed", "heads", "head_dim"),
+                init="fan_in", dtype=dtype),
+        "wk": P((d_model, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"),
+                init="fan_in", dtype=dtype),
+        "wv": P((d_model, a.num_kv_heads, a.head_dim), ("embed", "kv_heads", "head_dim"),
+                init="fan_in", dtype=dtype),
+        "wo": P((a.num_heads, a.head_dim, d_model), ("heads", "head_dim", "embed"),
+                init="fan_in", dtype=dtype),
+    }
+    if a.qk_norm:
+        s["q_norm"] = rmsnorm_spec(a.head_dim, dtype)
+        s["k_norm"] = rmsnorm_spec(a.head_dim, dtype)
+    return s
+
+
+def _project_qkv(params, a: AttentionConfig, x, kv_source=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, wcast(params["wq"], x))
+    src = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", src, wcast(params["wk"], src))
+    v = jnp.einsum("bsd,dhk->bshk", src, wcast(params["wv"], src))
+    if a.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def _expand_kv(k, q_per_kv: int):
+    """(B, S, KV, hd) -> (B, S, KV*q_per_kv, hd) by repetition (GQA)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _sdpa(q, k, v, mask, compute_dtype):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,H,hd); mask: (B|1, 1|H, Sq, Sk) bool."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs.astype(compute_dtype),
+                     v.astype(compute_dtype))
+    return out
+
+
+def _grouped_sdpa(q, k, v, a: AttentionConfig, q_pos, k_pos, compute_dtype):
+    """GQA attention without expanding KV: q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
+
+    Heads are kept grouped (KV, rep) so the per-device logits tensor is
+    (B, KV, rep, Sq, Sk) — shardable on the KV-group axis and never
+    materializing repeated keys."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqgrk,bsgk->bgrqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    diff = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones(diff.shape, dtype=bool)
+    if a.causal:
+        mask &= diff >= 0
+    if a.sliding_window is not None:
+        mask &= diff < a.sliding_window
+    logits = jnp.where(mask[None, None, None], logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqs,bsgk->bqgrk", probs.astype(compute_dtype),
+                     v.astype(compute_dtype))
+    return out.reshape(B, Sq, H, hd)
+
+
+def _chunked_sdpa(q, k, v, a: AttentionConfig, positions, compute_dtype,
+                  chunk: int):
+    """Memory-efficient attention: lax.scan over query chunks.
+
+    Peak per-chunk logits are (B, KV, rep, chunk, Sk) — the XLA-level
+    equivalent of flash attention's working-set bound (the Pallas kernel
+    tightens it further on real TPUs). The chunk body is rematerialized in
+    the backward pass.
+
+    Sliding-window layers only read the key span that can be in-window for
+    the chunk (a dynamic slice of ``window+chunk`` keys, rounded to chunk)
+    instead of masking a full (chunk, S) logits block — S/(window+chunk)×
+    fewer attention FLOPs/bytes at long S (EXPERIMENTS.md §Perf, SWA
+    hillclimb: llama4-scout prefill useful 0.03→…)."""
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    k_pos = positions
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(nc, chunk)
+    idx = jnp.arange(nc, dtype=jnp.int32)
+
+    win = a.sliding_window
+    kspan = S
+    if win is not None and a.causal:
+        kspan = min(S, -(-(win + chunk) // chunk) * chunk)
+
+    def body(carry, xs):
+        q_i, pos_i, i = xs
+        if kspan < S:
+            start = jnp.clip(i * chunk + chunk - kspan, 0, S - kspan)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, kspan, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, kspan, axis=1)
+            kp_i = jax.lax.dynamic_slice_in_dim(k_pos, start, kspan, axis=0)
+        else:
+            k_i, v_i, kp_i = k, v, k_pos
+        o = _grouped_sdpa(q_i, k_i, v_i, a, pos_i, kp_i, compute_dtype)
+        return carry, o
+
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, (), (qc, pc, idx))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _banded_sdpa(q, k, v, a: AttentionConfig, positions, compute_dtype,
+                 chunk: int):
+    """Sliding-window attention as a *static* band: unrolled query blocks,
+    each statically sliced to its in-window key span.
+
+    Same FLOPs as the windowed ``_chunked_sdpa`` but loop-free HLO — used by
+    the roofline costing (`launch/costs.py`) so windowed layers report
+    S·(window+chunk) attention cost instead of the masked-full-S² the 'xla'
+    path would count, and usable as a runtime impl when scan-free HLO is
+    preferred."""
+    B, S, H, hd = q.shape
+    win = a.sliding_window
+    if win is None or not a.causal:
+        return _grouped_sdpa(q, k, v, a, positions, positions, compute_dtype)
+    chunk = min(max(chunk, min(win, 4096)), S)
+    nc = -(-S // chunk)
+    kspan = min(S, -(-(win + chunk) // chunk) * chunk)
+    outs = []
+    for i in range(nc):
+        q0, q1 = i * chunk, min((i + 1) * chunk, S)
+        start = max(0, min(q1 - kspan, S - kspan))
+        o = _grouped_sdpa(q[:, q0:q1], k[:, start:start + kspan],
+                          v[:, start:start + kspan], a, positions[q0:q1],
+                          positions[start:start + kspan], compute_dtype)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def make_mask(a: AttentionConfig, q_pos, k_pos):
+    """Boolean attention mask from query/key position vectors.
+
+    q_pos: (Sq,), k_pos: (Sk,) -> (1, 1, Sq, Sk). Causal and/or windowed."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones(diff.shape, dtype=bool)
+    if a.causal:
+        mask &= diff >= 0
+    if a.sliding_window is not None:
+        mask &= diff < a.sliding_window
+    return mask[None, None]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention(params, a: AttentionConfig, x, *, positions=None, kv_source=None,
+              src_positions=None, compute_dtype=jnp.bfloat16, impl="xla",
+              attn_chunk: int = 512, return_kv: bool = False):
+    """Full-sequence attention. Returns (B, S, d_model), or
+    ``(out, (k, v))`` with the rope'd keys/values when ``return_kv`` —
+    the fused-prefill path that emits the decode KV cache in one pass.
+
+    kv_source: if given, cross-attention to (B, S_src, d_model) (no causal
+    mask, no rope on source unless src_positions given)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, a, x, kv_source)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    if a.use_rope and kv_source is None:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+
+    if kv_source is not None:
+        # cross-attention: non-causal over a short encoder source
+        import dataclasses as _dc
+        a_x = _dc.replace(a, causal=False, sliding_window=None)
+        src_pos = jnp.arange(kv_source.shape[1], dtype=jnp.int32)
+        out = _grouped_sdpa(q, k, v, a_x, positions[0], src_pos, compute_dtype)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=a.causal,
+                                   window=a.sliding_window)
+    elif impl == "chunked":
+        out = _chunked_sdpa(q, k, v, a, positions[0], compute_dtype,
+                            chunk=attn_chunk)
+    elif impl == "banded":
+        out = _banded_sdpa(q, k, v, a, positions[0], compute_dtype,
+                           chunk=attn_chunk)
+    else:
+        out = _grouped_sdpa(q, k, v, a, positions[0], positions[0],
+                            compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, wcast(params["wo"], out))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode step
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, length: int, a: AttentionConfig, dtype):
+    """Abstract-or-real KV cache for one layer: dict of (B, L, KV, hd)."""
+    shape = (batch, length, a.num_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_spec(batch: int, length: int, a: AttentionConfig, dtype):
+    shape = (batch, length, a.num_kv_heads, a.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_attention(params, a: AttentionConfig, x, cache, index, *,
+                     compute_dtype=jnp.bfloat16, window: Optional[int] = None,
+                     kv_source=None):
+    """One-token decode: x (B, 1, D); cache holds L past positions.
+
+    ``index`` is the current absolute position (scalar int32). If ``window``
+    is set, the cache is a ring buffer of size L=window and writes wrap.
+    Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, a, x)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    if a.use_rope:
+        q = apply_rope(q, pos, a.rope_theta)
+        k_new = apply_rope(k_new, pos, a.rope_theta)
+
+    if kv_source is not None:
+        # cross-attention path: attend over the full encoder output, no cache
+        import dataclasses as _dc
+        from repro.models.layers import wcast as _wc
+        k = jnp.einsum("bsd,dhk->bshk", kv_source, _wc(params["wk"], kv_source))
+        v = jnp.einsum("bsd,dhk->bshk", kv_source, _wc(params["wv"], kv_source))
+        if a.qk_norm:
+            k = rmsnorm(params["k_norm"], k)
+        a_x = _dc.replace(a, causal=False, sliding_window=None)
+        src_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        out = _grouped_sdpa(q, k, v, a_x, jnp.zeros((1,), jnp.int32), src_pos,
+                            compute_dtype)
+        return jnp.einsum("bshk,hkd->bsd", out, _wc(params["wo"], out)), cache
+
+    slot = index % L if window is not None else index
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = {"k": k, "v": v}
+
+    # absolute key positions per cache slot (ring-buffer aware)
+    slots = jnp.arange(L, dtype=jnp.int32)
+    if window is not None:
+        # ring buffer: slot s holds absolute position p where p % L == s and
+        # p <= index and p > index - L
+        k_pos = index - ((slot - slots) % L)
+    else:
+        k_pos = slots
+    valid = (k_pos >= 0) & (k_pos <= index)
+    # encode invalid slots as a *future* position: the causal mask drops them
+    k_pos_safe = jnp.where(valid, k_pos, index + 1)
+    import dataclasses as _dc
+    a_d = a if a.sliding_window is None else _dc.replace(
+        a, sliding_window=min(a.sliding_window, L))
+    q_pos = jnp.full((1,), index, jnp.int32)
+    out = _grouped_sdpa(q, k, v, a_d, q_pos, k_pos_safe, compute_dtype)
+    from repro.models.layers import wcast as _wc2
+    return jnp.einsum("bshk,hkd->bsd", out, _wc2(params["wo"], out)), new_cache

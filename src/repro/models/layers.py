@@ -1,0 +1,208 @@
+"""Spec-first pure-JAX module substrate.
+
+There is no flax/optax in this environment, so the framework defines its own
+minimal module convention:
+
+* every module exposes ``*_spec(cfg) -> {name: P | subdict}`` describing its
+  parameters — shape, *logical axis names*, initializer, dtype;
+* ``init_params(key, spec)`` materializes a params pytree (same nesting);
+* ``abstract_params(spec)`` produces ``ShapeDtypeStruct``s (used by the
+  multi-pod dry-run so 405B-scale params are never allocated);
+* ``spec_axes(spec)`` yields the logical-axes tree consumed by
+  ``repro.sharding`` to build ``PartitionSpec``s;
+* apply functions are plain functions ``apply(params, cfg, inputs, ...)``.
+
+Logical axis vocabulary (mapped to mesh axes in ``sharding/rules.py``):
+  'vocab', 'embed', 'ffn', 'heads', 'kv_heads', 'head_dim', 'expert',
+  'expert_ffn', 'state', 'conv', 'layers' (the scan-stacking axis), None.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """Parameter spec: shape + logical axes + init + dtype."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | fan_in | lecun
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# ---------------------------------------------------------------------------
+# spec tree utilities
+# ---------------------------------------------------------------------------
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _flatten_spec(spec, prefix=()):
+    out = []
+    for k, v in spec.items():
+        path = prefix + (k,)
+        if _is_spec(v):
+            out.append((path, v))
+        else:
+            out.extend(_flatten_spec(v, path))
+    return out
+
+
+def _init_leaf(key, p: P):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "fan_in":
+        fan_in = p.shape[0] if len(p.shape) >= 1 else 1
+        s = 1.0 / np.sqrt(max(fan_in, 1))
+        return (s * jax.random.normal(key, p.shape)).astype(p.dtype)
+    if p.init == "lecun":
+        fan_in = int(np.prod(p.shape[:-1])) or 1
+        s = 1.0 / np.sqrt(fan_in)
+        return (s * jax.random.truncated_normal(key, -2.0, 2.0, p.shape)).astype(p.dtype)
+    # 'normal'
+    return (p.scale * jax.random.normal(key, p.shape)).astype(p.dtype)
+
+
+def init_params(key, spec) -> Dict:
+    """Materialize a params pytree from a spec tree (deterministic per-path)."""
+    flat = _flatten_spec(spec)
+    out: Dict = {}
+    for path, p in flat:
+        k = key
+        for name in path:
+            k = jax.random.fold_in(k, hash(name) % (2**31))
+        node = out
+        for name in path[:-1]:
+            node = node.setdefault(name, {})
+        node[path[-1]] = _init_leaf(k, p)
+    return out
+
+
+def abstract_params(spec) -> Dict:
+    """ShapeDtypeStruct tree — dry-run params without any allocation."""
+    return _map_spec(spec, lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype))
+
+
+def spec_axes(spec) -> Dict:
+    """Logical-axes tree (same nesting as params)."""
+    return _map_spec(spec, lambda p: p.axes)
+
+
+def _map_spec(spec, fn):
+    out = {}
+    for k, v in spec.items():
+        out[k] = fn(v) if _is_spec(v) else _map_spec(v, fn)
+    return out
+
+
+def spec_param_count(spec) -> int:
+    return sum(int(np.prod(p.shape)) for _, p in _flatten_spec(spec))
+
+
+def stack_spec(spec, n: int):
+    """Prepend a 'layers' scan axis of length n to every leaf of a spec."""
+    return _map_spec(spec, lambda p: dataclasses.replace(
+        p, shape=(n,) + p.shape, axes=("layers",) + p.axes))
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": P((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": P((d,), ("embed",), init="ones", dtype=dtype),
+            "bias": P((d,), ("embed",), init="zeros", dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def mlp_spec(d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    if act == "swiglu":
+        return {
+            "w_gate": P((d_model, d_ff), ("embed", "ffn"), init="fan_in", dtype=dtype),
+            "w_up": P((d_model, d_ff), ("embed", "ffn"), init="fan_in", dtype=dtype),
+            "w_down": P((d_ff, d_model), ("ffn", "embed"), init="fan_in", dtype=dtype),
+        }
+    return {
+        "w_up": P((d_model, d_ff), ("embed", "ffn"), init="fan_in", dtype=dtype),
+        "b_up": P((d_ff,), ("ffn",), init="zeros", dtype=dtype),
+        "w_down": P((d_ff, d_model), ("ffn", "embed"), init="fan_in", dtype=dtype),
+        "b_down": P((d_model,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def wcast(w, x):
+    """Apply-time weight cast: params are stored f32 (optimizer fidelity)
+    but matmuls run in the activation dtype — otherwise every bf16×f32
+    matmul promotes to f32 activations, doubling the memory and
+    activation-collective roofline terms (EXPERIMENTS.md §Perf iter 2)."""
+    return w.astype(x.dtype)
+
+
+def mlp(params, x, act: str):
+    if act == "swiglu":
+        g = x @ wcast(params["w_gate"], x)
+        u = x @ wcast(params["w_up"], x)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return h @ wcast(params["w_down"], x)
+    h = x @ wcast(params["w_up"], x) + params["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ wcast(params["w_down"], x) + params["b_down"].astype(x.dtype)
+
+
+def embedding_spec(vocab: int, d_model: int, dtype=jnp.float32):
+    # the embed dim is deliberately NOT FSDP-sharded ('embed_table' maps to
+    # no mesh axis): the table is already vocab-sharded over 'model', and
+    # double-sharding turns every lookup into a full-batch all-reduce.
+    return {"table": P((vocab, d_model), ("vocab", "embed_table"),
+                       init="normal", scale=0.02, dtype=dtype)}
+
+
+def embed(params, tokens, compute_dtype):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x):
+    # logits in f32 for stable softmax-xent
+    return x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T
+
+
+def positional_embedding_spec(max_len: int, d_model: int, dtype=jnp.float32):
+    return {"pos": P((max_len, d_model), (None, "embed"), init="normal",
+                     scale=0.02, dtype=dtype)}

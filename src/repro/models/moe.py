@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based scatter dispatch.
+
+TPU-native adaptation notes (vs the common GPU megablocks path):
+* dispatch/combine are scatter/gather over an (E, C, D) expert buffer rather
+  than giant one-hot einsums — fixed shapes, fits VMEM-tiled matmuls, and the
+  buffer's expert axis is shardable over the mesh `model` axis so the
+  token->expert movement lowers to an all-to-all (expert parallelism);
+* capacity C = ceil(tokens_per_device * capacity_factor * top_k / E) keeps
+  HLO FLOPs proportional to *active* params (roofline-faithful); overflow
+  tokens are dropped (standard GShard behavior) and counted in aux stats.
+
+Sharding profiles (config.moe.sharding):
+  'expert' — expert weight dim 0 on the model axis (requires E % model == 0
+             or model % E == 0); dispatch shows up as all-to-all.
+  'tensor' — expert d_ff on the model axis (E indivisible by mesh, e.g.
+             mixtral's 8 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import MoEConfig
+from repro.models.layers import P
+
+
+def moe_spec(d_model: int, m: MoEConfig, act: str, dtype=jnp.float32) -> Dict:
+    e, f = m.num_experts, m.d_ff_expert
+    ax0 = "expert"
+    s = {
+        "router": P((d_model, e), ("embed", "expert_router"), init="fan_in",
+                    dtype=jnp.float32),
+        "w_up": P((e, d_model, f), (ax0, "embed", "expert_ffn"), init="fan_in", dtype=dtype),
+        "w_down": P((e, f, d_model), (ax0, "expert_ffn", "embed"), init="fan_in", dtype=dtype),
+    }
+    if act == "swiglu":
+        s["w_gate"] = P((e, d_model, f), (ax0, "embed", "expert_ffn"), init="fan_in", dtype=dtype)
+    return s
+
+
+def _capacity(tokens: int, m: MoEConfig) -> int:
+    c = int(tokens * m.capacity_factor * m.top_k / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _reduce_combine_ctx(m: MoEConfig):
+    """(ctx, model_axis, batch_shards) when the manual combine-before-reduce
+    path can run: 'tensor' sharding, an active mesh context with non-empty
+    batch axes (the group dim must be shardable over them — the gossip
+    vmapped path keeps the gather combine), model axis size > 1."""
+    if m.sharding != "tensor":
+        return None
+    from repro.sharding.act import current_ctx
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None or not ctx.batch_axes:
+        return None
+    if ctx.mesh_sizes.get(ctx.model_axis, 1) <= 1:
+        return None
+    import numpy as _np
+    bsz = int(_np.prod([ctx.mesh_sizes.get(a, 1) for a in ctx.batch_axes]))
+    if bsz <= 0:
+        return None
+    return ctx, ctx.model_axis, bsz
+
+
+def moe_ffn(params, m: MoEConfig, x, act: str) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, D) -> (B, S, D), aux stats (load-balance loss etc.).
+
+    Grouped (GShard-style) dispatch: tokens are split into
+    ``m.dispatch_groups`` groups — the step builders set this to the
+    batch-shard count, so each data shard dispatches into its OWN
+    (E, C_group, D) buffer with capacity computed from the group's token
+    count. Under pjit the group dim is batch-sharded, which removes the
+    full-size buffer + scatter-add all-reduce that global capacity causes
+    (the mixtral prefill hillclimb in EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    G = m.dispatch_groups if m.dispatch_groups > 0 and T % m.dispatch_groups == 0 else 1
+    Tg = T // G
+    C = _capacity(Tg, m)
+    xt = x.reshape(G, Tg, D)
+
+    from repro.sharding.act import shard_expert_buffer, shard_group_tokens
+    xt = shard_group_tokens(xt)
+
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                # (G, Tg, K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- position-in-expert via per-group cumsum over (Tg*K,) assignments --
+    flat_expert = expert_idx.reshape(G, Tg * K)                    # (G, Tg*K)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)       # (G, Tg*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                           # (G, Tg*K, E)
+    pos_in_expert = jnp.take_along_axis(pos, flat_expert[..., None],
+                                        axis=2)[..., 0]
+    keep = pos_in_expert < C                                       # (G, Tg*K)
+    safe_pos = jnp.where(keep, pos_in_expert, C - 1)
+    token_idx = jnp.repeat(jnp.arange(Tg), K)                      # (Tg*K,)
+
+    def _dispatch(xg, fe, sp, kp):
+        """One group's scatter into its (E, C, D) buffer."""
+        contrib = jnp.where(kp[:, None], xg[token_idx], 0).astype(x.dtype)
+        return jnp.zeros((E, C, D), x.dtype).at[fe, sp].add(contrib)
+
+    # dispatch: (G, E, C, D) — G batch-sharded, E model-sharded ('expert'
+    # mode) => the token->expert movement lowers to an all-to-all
+    buf = jax.vmap(_dispatch)(xt, flat_expert, safe_pos, keep)
+    buf = shard_expert_buffer(buf, m.sharding)
+
+    # expert FFN (batched over groups × experts)
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(buf.dtype))
+    if act == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(buf.dtype))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    def _combine(ob, fe, sp, kp, gv):
+        gathered = ob[fe, sp]                                      # (Tg*K, D)
+        gathered = jnp.where(kp[:, None], gathered, 0)
+        weighted = gathered * gv.reshape(-1)[:, None].astype(x.dtype)
+        return jnp.zeros((Tg, D), x.dtype).at[token_idx].add(weighted)
+
+    reduce_ctx = _reduce_combine_ctx(m) if m.combine == "reduce" else None
+    if reduce_ctx is not None and G % reduce_ctx[2] == 0:
+        # 'tensor'-mode combine-before-reduce (EXPERIMENTS.md §Perf B-4):
+        # GSPMD will not defer the f-contraction psum through the combine
+        # gather (measured, iteration B-3), so do it manually: inside a
+        # partial-manual shard_map over (batch axes × model), each f-shard
+        # computes its PARTIAL expert outputs for ITS token groups, gathers
+        # them back to token order, and only then psums — the TP all-reduce
+        # operand shrinks from E*C*D (top_k*cf x T*D) to T*D.
+        from jax.sharding import PartitionSpec as _PS
+        ctx, maxis, _bsz = reduce_ctx
+        bentry = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+        w_down = params["w_down"].astype(h.dtype)
+
+        def _down_combine(h_l, w_l, fe, sp, kp, gv):
+            ob = jnp.einsum("gecf,efd->gecd", h_l, w_l)            # partial
+            out = jax.vmap(_combine)(ob, fe, sp, kp, gv)           # (G_loc,Tg,D) partial
+            # psum in f32: XLA's CPU backend crashes on a bf16 all-reduce
+            # inside a partial-manual shard_map ("Invalid binary instruction
+            # opcode copy"); f32 is also the numerically right accumulator
+            return jax.lax.psum(out.astype(jnp.float32), maxis).astype(out.dtype)
+
+        out = jax.shard_map(
+            _down_combine, mesh=ctx.mesh,
+            in_specs=(_PS(bentry, None, None, maxis), _PS(None, maxis, None),
+                      _PS(bentry, None), _PS(bentry, None), _PS(bentry, None),
+                      _PS(bentry, None, None)),
+            out_specs=_PS(bentry, None, None),
+            axis_names=set(ctx.batch_axes) | {maxis}, check_vma=False,
+        )(h, w_down, flat_expert, safe_pos, keep, gate_vals)
+    else:
+        out_buf = jnp.einsum("gecf,efd->gecd", h,
+                             params["w_down"].astype(h.dtype))     # (G, E, C, D)
+        # NOT sharding-constrained (see B-3: constraining forces the psum
+        # at full E*C*D size; leaving it free lets GSPMD pick — it still
+        # reduces at the dot, hence the B-4 shard_map path above)
+        out = jax.vmap(_combine)(out_buf, flat_expert, safe_pos, keep,
+                                 gate_vals)
+    out = shard_group_tokens(out)
+
+    # --- aux: switch-style load-balance loss + drop fraction ----------------
+    probs_t = probs.reshape(T, E)
+    me = jnp.mean(probs_t, axis=0)                                  # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0].reshape(T), E,
+                                 dtype=jnp.float32), axis=0)
+    aux = {
+        "load_balance_loss": E * jnp.sum(me * ce) * m.router_aux_weight,
+        "drop_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, S, D), aux

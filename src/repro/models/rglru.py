@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(-c · softplus(Λ) · r_t),  r_t, i_t = σ(block-diag linear of x_t).
+
+Training uses ``jax.lax.associative_scan`` over the time axis (log-depth on
+TPU); decode is the single recurrence step. The recurrence runs in f32, the
+matmuls in the compute dtype — the paper's numerics, adapted to bf16 MXU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RGLRUConfig
+from repro.models.layers import P
+
+
+def rglru_dims(d_model: int, r: RGLRUConfig):
+    width = r.lru_width or d_model
+    heads = r.num_heads or 8
+    assert width % heads == 0
+    return width, heads
+
+
+def rglru_spec(d_model: int, r: RGLRUConfig, dtype=jnp.float32) -> Dict:
+    width, heads = rglru_dims(d_model, r)
+    hw = width // heads
+    return {
+        "w_x": P((d_model, width), ("embed", "ffn"), init="fan_in", dtype=dtype),
+        "w_y": P((d_model, width), ("embed", "ffn"), init="fan_in", dtype=dtype),
+        "conv_w": P((r.d_conv, width), ("conv", "ffn"), init="fan_in", dtype=dtype),
+        "conv_b": P((width,), ("ffn",), init="zeros", dtype=dtype),
+        # block-diagonal gates (recurrence gate a, input gate i)
+        "w_a": P((heads, hw, hw), ("heads", None, None), init="fan_in", dtype=dtype),
+        "b_a": P((heads, hw), ("heads", None), init="zeros", dtype=dtype),
+        "w_i": P((heads, hw, hw), ("heads", None, None), init="fan_in", dtype=dtype),
+        "b_i": P((heads, hw), ("heads", None), init="zeros", dtype=dtype),
+        "lam": P((width,), ("ffn",), init="normal", scale=0.5, dtype=jnp.float32),
+        "w_out": P((width, d_model), ("ffn", "embed"), init="fan_in", dtype=dtype),
+    }
+
+
+def _gates(params, r: RGLRUConfig, x, width, heads):
+    """x: (B, S, width) -> log_a (f32), gated input (B, S, width)."""
+    hw = width // heads
+    xh = x.reshape(*x.shape[:-1], heads, hw)
+    ra = jnp.einsum("...hk,hkj->...hj", xh, params["w_a"].astype(xh.dtype)) + params["b_a"].astype(x.dtype)
+    ri = jnp.einsum("...hk,hkj->...hj", xh, params["w_i"].astype(xh.dtype)) + params["b_i"].astype(x.dtype)
+    rt = jax.nn.sigmoid(ra.astype(jnp.float32)).reshape(*x.shape[:-1], width)
+    it = jax.nn.sigmoid(ri.astype(jnp.float32)).reshape(*x.shape[:-1], width)
+    log_a = -r.c * jax.nn.softplus(params["lam"]) * rt        # (B, S, width) f32
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * it * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def _conv(params, r: RGLRUConfig, x, conv_state=None):
+    w = params["conv_w"].astype(x.dtype)
+    K = w.shape[0]
+    if conv_state is not None:
+        full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+        full = jnp.concatenate([pad, x], axis=1)
+    new_state = full[:, -(K - 1):]
+    out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_forward(params, r: RGLRUConfig, d_model: int, x, *,
+                  compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence recurrent block. x: (B, S, d_model).
+
+    ``return_state`` also returns the decode state {"h", "conv"} after the
+    last position (fused prefill)."""
+    width, heads = rglru_dims(d_model, r)
+    y_branch = jax.nn.gelu((x @ params["w_y"].astype(x.dtype)).astype(jnp.float32))
+    xb = x @ params["w_x"].astype(x.dtype)
+    xb, conv_state = _conv(params, r, xb)
+    log_a, gated = _gates(params, r, xb, width, heads)
+
+    # associative scan: h_t = a_t * h_{t-1} + b_t over axis 1
+    def op(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a = jnp.exp(log_a)
+    _, h = jax.lax.associative_scan(op, (a, gated), axis=1)
+    out = (h * y_branch).astype(compute_dtype)
+    out = out @ params["w_out"].astype(out.dtype)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": conv_state.astype(compute_dtype)}
+    return out
+
+
+def rglru_state_spec(batch: int, d_model: int, r: RGLRUConfig, dtype):
+    width, _ = rglru_dims(d_model, r)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, r.d_conv - 1, width), dtype),
+    }
+
+
+def init_rglru_state(batch: int, d_model: int, r: RGLRUConfig, dtype):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        rglru_state_spec(batch, d_model, r, dtype))
+
+
+def rglru_step(params, r: RGLRUConfig, d_model: int, x, state, *,
+               compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (B, 1, d_model)."""
+    width, heads = rglru_dims(d_model, r)
+    y_branch = jax.nn.gelu((x @ params["w_y"].astype(x.dtype)).astype(jnp.float32))  # (B,1,w)
+    xb = x @ params["w_x"].astype(x.dtype)
+    xb, conv_state = _conv(params, r, xb, conv_state=state["conv"])
+    log_a, gated = _gates(params, r, xb, width, heads)               # (B,1,w)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + gated[:, 0]
+    out = (h[:, None] * y_branch).astype(compute_dtype)
+    return out @ params["w_out"].astype(out.dtype), {"h": h, "conv": conv_state}

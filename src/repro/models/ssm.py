@@ -1,0 +1,222 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill: the chunked dual form — quadratic attention-like computation
+inside chunks of ``chunk_size`` plus a linear cross-chunk state recurrence.
+Decode: the classic linear recurrence, O(1) state per step (this is why the
+``long_500k`` workload is native for this family).
+
+TPU adaptation: the chunked form is expressed as batched einsums whose
+contraction dims (head_dim, d_state, chunk) are 64/128-multiples — MXU
+friendly — and the cross-chunk recurrence uses the chunk-level ``segsum``
+decay matrix (n_chunks² is small) instead of a sequential scan, keeping a
+single fused HLO while staying numerically in f32 where it matters.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SSMConfig
+from repro.models.layers import P, rmsnorm_spec
+
+
+def ssm_dims(d_model: int, s: SSMConfig):
+    d_inner = s.expand * d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_spec(d_model: int, s: SSMConfig, dtype=jnp.float32) -> Dict:
+    d_inner, H, conv_dim = ssm_dims(d_model, s)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    return {
+        "w_in": P((d_model, d_in_proj), ("embed", "ffn"), init="fan_in", dtype=dtype),
+        "conv_w": P((s.d_conv, conv_dim), ("conv", "ffn"), init="fan_in", dtype=dtype),
+        "conv_b": P((conv_dim,), ("ffn",), init="zeros", dtype=dtype),
+        "A_log": P((H,), ("heads",), init="zeros", dtype=jnp.float32),
+        "D": P((H,), ("heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": P((H,), ("heads",), init="zeros", dtype=jnp.float32),
+        "norm": rmsnorm_spec(d_inner, dtype),
+        "w_out": P((d_inner, d_model), ("ffn", "embed"), init="fan_in", dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) with out[..., i, j] = sum_{j<k<=i} x[..k],
+    and -inf above the diagonal. The decay-matrix builder of SSD."""
+    T = x.shape[-1]
+    xe = jnp.broadcast_to(x[..., None], x.shape + (T,))   # out[..., d, e] = x[d]
+    lower_strict = jnp.tril(jnp.ones((T, T), bool), k=-1)
+    xe = jnp.where(lower_strict, xe, 0.0)
+    seg = jnp.cumsum(xe, axis=-2)
+    lower = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(lower, seg, -jnp.inf)
+
+
+def _split_proj(params, s: SSMConfig, d_model, x):
+    d_inner, H, conv_dim = ssm_dims(d_model, s)
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _conv(params, s: SSMConfig, xBC, conv_state=None):
+    """Causal depthwise conv width d_conv over (B, S, conv_dim).
+
+    If conv_state (B, d_conv-1, conv_dim) is given (decode), prepend it and
+    return (out, new_state)."""
+    w = params["conv_w"].astype(xBC.dtype)                # (K, C)
+    K = w.shape[0]
+    if conv_state is not None:
+        full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+        new_state = full[:, -(K - 1):]
+    else:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+        full = jnp.concatenate([pad, xBC], axis=1)
+        new_state = full[:, -(K - 1):]
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    out = out + params["conv_b"].astype(xBC.dtype)
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """The SSD dual-form scan.
+
+    x: (b, S, h, p) inputs; dt: (b, S, h) step sizes (post-softplus);
+    A: (h,) negative decay rates; B, C: (b, S, g, n). Returns y (b, S, h, p)
+    and the final state (b, h, p, n)."""
+    b, S, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if S % chunk != 0:
+        # Zero-pad to a chunk multiple. Padding with dt=0 is exact: the padded
+        # positions have decay exp(0)=1 (state carried through unchanged) and
+        # zero input, so the final state equals the state at position S and
+        # the padded outputs are discarded below.
+        pad = chunk - S % chunk
+        padS = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, final_state = ssd_chunked(padS(x), padS(dt), A, padS(B), padS(C), chunk)
+        return y[:, :S], final_state
+    c = S // chunk
+    rep = h // g
+
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, c, chunk, g, n), rep, axis=3)  # (b,c,l,h,n)
+    Cc = jnp.repeat(C.reshape(b, c, chunk, g, n), rep, axis=3)
+
+    a = (dtc * A[None, None, None, :]).astype(jnp.float32)      # (b,c,l,h) log decay
+    a = jnp.moveaxis(a, -1, 2)                                  # (b,c,h,l)
+    a_cum = jnp.cumsum(a, axis=-1)                              # (b,c,h,l)
+
+    x_dt = xc * dtc[..., None].astype(xc.dtype)                 # (b,c,l,h,p)
+
+    # 1) intra-chunk (the "attention-like" quadratic-in-chunk term)
+    L = jnp.exp(_segsum(a))                                     # (b,c,h,l,l)
+    Y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        Cc, Bc, L.astype(Cc.dtype), x_dt)
+
+    # 2) chunk-final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (b,c,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn",
+                        Bc, decay_states.astype(Bc.dtype), x_dt)  # (b,c,h,p,n)
+
+    # 3) cross-chunk recurrence via chunk-level segsum (c+1 x c+1 decay)
+    chunk_decay = a_cum[..., -1]                                # (b,c,h)
+    cd = jnp.moveaxis(chunk_decay, -1, 1)                       # (b,h,c)
+    cd = jnp.pad(cd, ((0, 0), (0, 0), (1, 0)))                  # (b,h,c+1)
+    Dk = jnp.exp(_segsum(cd))                                   # (b,h,c+1,c+1)
+    states_pad = jnp.pad(states, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    all_states = jnp.einsum("bhzc,bchpn->bzhpn", Dk.astype(states.dtype),
+                            states_pad)                         # (b,c+1,h,p,n)
+    init_states, final_state = all_states[:, :-1], all_states[:, -1]
+
+    # 4) contribution of the carried-in state to each position
+    out_decay = jnp.exp(a_cum)                                  # (b,c,h,l)
+    Y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                       Cc, init_states, out_decay.astype(Cc.dtype))
+
+    y = (Y_diag + Y_off).reshape(b, S, h, p)
+    return y, final_state
+
+
+def ssm_forward(params, s: SSMConfig, d_model: int, x, *,
+                compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, d_model) -> same.
+
+    ``return_state`` also returns the decode state {"ssm", "conv"} after the
+    last position — the fused-prefill path (one pass instead of S recurrent
+    steps)."""
+    from repro.models.layers import rmsnorm
+    d_inner, H, _ = ssm_dims(d_model, s)
+    B_, S, _ = x.shape
+    z, xBC_raw, dt = _split_proj(params, s, d_model, x)
+    xBC, conv_state = _conv(params, s, xBC_raw)
+    xs = xBC[..., :d_inner].reshape(B_, S, H, s.head_dim)
+    Bm = xBC[..., d_inner:d_inner + s.n_groups * s.d_state].reshape(B_, S, s.n_groups, s.d_state)
+    Cm = xBC[..., d_inner + s.n_groups * s.d_state:].reshape(B_, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                               # (H,)
+
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B_, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(params["norm"], y)
+    out = y @ params["w_out"].astype(y.dtype)
+    if return_state:
+        # decode carries the *pre-activation* conv window of raw xBC rows
+        return out, {"ssm": final_state.astype(jnp.float32),
+                     "conv": conv_state.astype(compute_dtype)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_spec(batch: int, d_model: int, s: SSMConfig, dtype):
+    d_inner, H, conv_dim = ssm_dims(d_model, s)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def init_ssm_state(batch: int, d_model: int, s: SSMConfig, dtype):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        ssm_state_spec(batch, d_model, s, dtype))
+
+
+def ssm_step(params, s: SSMConfig, d_model: int, x, state, *,
+             compute_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    from repro.models.layers import rmsnorm
+    d_inner, H, _ = ssm_dims(d_model, s)
+    B_ = x.shape[0]
+    z, xBC, dt = _split_proj(params, s, d_model, x)
+    xBC, conv_state = _conv(params, s, xBC, conv_state=state["conv"])
+    xs = xBC[..., :d_inner].reshape(B_, H, s.head_dim)
+    Bm = xBC[:, 0, d_inner:d_inner + s.n_groups * s.d_state].reshape(B_, s.n_groups, s.d_state)
+    Cm = xBC[:, 0, d_inner + s.n_groups * s.d_state:].reshape(B_, s.n_groups, s.d_state)
+    rep = H // s.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=1)                            # (B, H, N)
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+
+    dA = jnp.exp(dt * A[None, :])                               # (B, H)
+    xf = xs.astype(jnp.float32) * dt[..., None]                 # (B, H, P)
+    new_ssm = (state["ssm"] * dA[..., None, None]
+               + xf[..., :, None] * Bm.astype(jnp.float32)[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Cm.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, 1, d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(params["norm"], y)
+    return y @ params["w_out"].astype(y.dtype), {"ssm": new_ssm, "conv": conv_state}

@@ -1,0 +1,574 @@
+"""Model assembler: configs -> spec/forward/decode for every assigned family.
+
+Layer kinds (``ModelConfig.layer_pattern``):
+  'attn'   — global (or config-windowed) self-attention + FFN/MoE
+  'local'  — sliding-window self-attention (window from rglru.local_window) + FFN
+  'ssm'    — Mamba-2 SSD mixer (no FFN when d_ff == 0)
+  'rglru'  — RG-LRU recurrent mixer + FFN
+  'cross'  — gated cross-attention layer (Llama-3.2-Vision style) + FFN
+  'selfcross' — self-attn + cross-attn + FFN in one layer (whisper decoder)
+
+The stack is scanned over *super-blocks* of one pattern period (stacked
+params), with any remainder layers unrolled — this keeps the HLO size
+O(pattern) instead of O(num_layers), which is what makes compiling the
+126-layer llama3-405b on a host CPU feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import P
+from repro.sharding.act import shard_activations, shard_logits
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+
+def _norm_spec(cfg: ModelConfig):
+    return (L.layernorm_spec if cfg.norm == "layernorm" else L.rmsnorm_spec)(
+        cfg.d_model, cfg.param_dtype)
+
+
+def _apply_norm(cfg: ModelConfig, params, x):
+    if cfg.norm == "layernorm":
+        return L.layernorm(params, x, cfg.norm_eps)
+    return L.rmsnorm(params, x, cfg.norm_eps)
+
+
+def _ffn_spec(cfg: ModelConfig):
+    if cfg.moe is not None:
+        return moe_mod.moe_spec(cfg.d_model, cfg.moe, cfg.act, cfg.param_dtype)
+    if cfg.d_ff == 0:
+        return None
+    return L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, cfg.param_dtype)
+
+
+def _attn_cfg(cfg: ModelConfig, kind: str):
+    a = cfg.attention
+    if kind == "local":
+        a = dataclasses.replace(a, sliding_window=cfg.rglru.local_window
+                                if cfg.rglru else a.sliding_window)
+    return a
+
+
+def layer_spec(cfg: ModelConfig, kind: str) -> Dict:
+    s: Dict[str, Any] = {"ln1": _norm_spec(cfg)}
+    if kind in ("attn", "local", "selfcross"):
+        s["attn"] = attn_mod.attention_spec(cfg.d_model, _attn_cfg(cfg, kind),
+                                            cfg.param_dtype)
+    elif kind == "ssm":
+        s["ssm"] = ssm_mod.ssm_spec(cfg.d_model, cfg.ssm, cfg.param_dtype)
+    elif kind == "rglru":
+        s["rglru"] = rglru_mod.rglru_spec(cfg.d_model, cfg.rglru, cfg.param_dtype)
+    elif kind == "cross":
+        s["cross_attn"] = attn_mod.attention_spec(cfg.d_model, cfg.attention,
+                                                  cfg.param_dtype)
+        if cfg.cross_attn and cfg.cross_attn.gated:
+            s["gate_attn"] = P((), (), init="zeros", dtype=jnp.float32)
+            s["gate_ffn"] = P((), (), init="zeros", dtype=jnp.float32)
+    if kind == "selfcross":
+        s["lnx"] = _norm_spec(cfg)
+        s["cross_attn"] = attn_mod.attention_spec(cfg.d_model, cfg.attention,
+                                                  cfg.param_dtype)
+    ffn = _ffn_spec(cfg)
+    if ffn is not None:
+        s["ln2"] = _norm_spec(cfg)
+        s["ffn"] = ffn
+    return s
+
+
+def _pattern_split(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    period = len(cfg.layer_pattern)
+    nb, rem = divmod(cfg.num_layers, period)
+    return nb, cfg.layer_pattern[:rem]
+
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    """Full parameter spec for the decoder/backbone (+ encoder tower)."""
+    nb, rem_kinds = _pattern_split(cfg)
+    spec: Dict[str, Any] = {
+        "embed": L.embedding_spec(cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": _norm_spec(cfg),
+    }
+    if nb > 0:
+        spec["blocks"] = {
+            f"l{j}": L.stack_spec(layer_spec(cfg, kind), nb)
+            for j, kind in enumerate(cfg.layer_pattern)
+        }
+    if rem_kinds:
+        spec["tail"] = {f"t{j}": layer_spec(cfg, kind)
+                        for j, kind in enumerate(rem_kinds)}
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {"w": P((cfg.d_model, cfg.vocab_size),
+                                  ("embed_table", "vocab"), init="fan_in",
+                                  dtype=cfg.param_dtype)}
+    if cfg.max_target_positions:
+        spec["pos_embed"] = L.positional_embedding_spec(
+            cfg.max_target_positions, cfg.d_model, cfg.param_dtype)
+    if cfg.encoder is not None:
+        from repro.models.encdec import encoder_spec
+        spec["encoder"] = encoder_spec(cfg)
+    return spec
+
+
+def init_params(key, cfg: ModelConfig):
+    return L.init_params(key, model_spec(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return L.abstract_params(model_spec(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return L.spec_axes(model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _kv_to_cache(k, v, L: int, dtype):
+    """Place prompt K/V rows into a (B, L, KV, hd) decode cache buffer.
+
+    Slots follow the decode ring addressing (slot = pos % L); for P <= L
+    (no ring wrap yet) this is the identity placement."""
+    B, P = k.shape[0], k.shape[1]
+    lo = max(0, P - L)
+    pos = jnp.arange(lo, P)
+    slots = pos % L
+    ck = jnp.zeros((B, L) + k.shape[2:], dtype).at[:, slots].set(
+        k[:, lo:].astype(dtype))
+    cv = jnp.zeros((B, L) + v.shape[2:], dtype).at[:, slots].set(
+        v[:, lo:].astype(dtype))
+    return ck, cv
+
+
+def _apply_layer(lp, kind: str, cfg: ModelConfig, x, *, positions,
+                 encoder_out, aux, cache_len: Optional[int] = None,
+                 window: Optional[int] = None):
+    """One layer. With ``cache_len`` set (fused prefill), also returns the
+    layer's decode-cache entry (KV buffer / recurrent state)."""
+    cd = cfg.compute_dtype
+    entry = None
+    h = _apply_norm(cfg, lp["ln1"], x)
+    if kind in ("attn", "local"):
+        a = _attn_cfg(cfg, kind)
+        mix = attn_mod.attention(lp["attn"], a, h,
+                                 positions=positions, compute_dtype=cd,
+                                 impl=cfg.attn_impl, attn_chunk=cfg.attn_chunk,
+                                 return_kv=cache_len is not None)
+        if cache_len is not None:
+            mix, (k, v) = mix
+            eff = min(cache_len, window) if window else cache_len
+            if a.sliding_window:
+                eff = min(eff, a.sliding_window)
+            ck, cv = _kv_to_cache(k, v, eff, cd)
+            entry = {"k": ck, "v": cv}
+        x = x + mix.astype(x.dtype)
+    elif kind == "ssm":
+        out = ssm_mod.ssm_forward(lp["ssm"], cfg.ssm, cfg.d_model, h,
+                                  compute_dtype=cd,
+                                  return_state=cache_len is not None)
+        if cache_len is not None:
+            out, entry = out
+        x = x + out.astype(x.dtype)
+    elif kind == "rglru":
+        out = rglru_mod.rglru_forward(lp["rglru"], cfg.rglru, cfg.d_model, h,
+                                      compute_dtype=cd,
+                                      return_state=cache_len is not None)
+        if cache_len is not None:
+            out, entry = out
+        x = x + out.astype(x.dtype)
+    elif kind == "cross":
+        mix = attn_mod.attention(lp["cross_attn"], cfg.attention, h,
+                                 positions=positions, kv_source=encoder_out,
+                                 compute_dtype=cd,
+                                 return_kv=cache_len is not None)
+        if cache_len is not None:
+            mix, (ck, cv) = mix
+            entry = {"ck": ck.astype(cd), "cv": cv.astype(cd)}
+        if "gate_attn" in lp:
+            mix = jnp.tanh(lp["gate_attn"]).astype(mix.dtype) * mix
+        x = x + mix.astype(x.dtype)
+    elif kind == "selfcross":
+        a = cfg.attention
+        mix = attn_mod.attention(lp["attn"], a, h,
+                                 positions=positions, compute_dtype=cd,
+                                 return_kv=cache_len is not None)
+        if cache_len is not None:
+            mix, (k, v) = mix
+            eff = min(cache_len, window) if window else cache_len
+            if cfg.max_target_positions:
+                eff = min(eff, cfg.max_target_positions)
+            sk, sv = _kv_to_cache(k, v, eff, cd)
+        x = x + mix.astype(x.dtype)
+        hx = _apply_norm(cfg, lp["lnx"], x)
+        xmix = attn_mod.attention(lp["cross_attn"], a, hx,
+                                  positions=positions, kv_source=encoder_out,
+                                  compute_dtype=cd,
+                                  return_kv=cache_len is not None)
+        if cache_len is not None:
+            xmix, (ck, cv) = xmix
+            entry = {"k": sk, "v": sv,
+                     "ck": ck.astype(cd), "cv": cv.astype(cd)}
+        x = x + xmix.astype(x.dtype)
+    else:
+        raise ValueError(kind)
+
+    if "ffn" in lp:
+        h2 = _apply_norm(cfg, lp["ln2"], x)
+        if cfg.moe is not None:
+            out, moe_aux = moe_mod.moe_ffn(lp["ffn"], cfg.moe, h2, cfg.act)
+            aux = aux + moe_aux["load_balance_loss"]
+        else:
+            out = L.mlp(lp["ffn"], h2, cfg.act)
+        if kind == "cross" and "gate_ffn" in lp:
+            out = jnp.tanh(lp["gate_ffn"]).astype(out.dtype) * out
+        x = x + out.astype(x.dtype)
+    if cache_len is not None:
+        return x, aux, entry
+    return x, aux
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, encoder_out=None,
+                   positions=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> final hidden states (B, S, d_model), aux loss."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    if "pos_embed" in params:
+        max_len = params["pos_embed"]["pos"].shape[0]
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[
+            jnp.minimum(positions, max_len - 1)]
+    if cfg.encoder is not None and encoder_out is not None:
+        from repro.models.encdec import encoder_forward
+        encoder_out = encoder_forward(params["encoder"], cfg, encoder_out)
+
+    nb, rem_kinds = _pattern_split(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    x = shard_activations(x)
+
+    def block_body(carry, bp):
+        x, aux = carry
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux = _apply_layer(bp[f"l{j}"], kind, cfg, x,
+                                  positions=positions,
+                                  encoder_out=encoder_out, aux=aux)
+        return (shard_activations(x), aux), None
+
+    if nb > 0:
+        body = jax.checkpoint(block_body) if cfg.remat else block_body
+        if cfg.scan_layers:
+            (x, aux0), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+        else:
+            for i in range(nb):
+                bp = jax.tree.map(lambda p: p[i], params["blocks"])
+                (x, aux0), _ = body((x, aux0), bp)
+    for j, kind in enumerate(rem_kinds):
+        x, aux0 = _apply_layer(params["tail"][f"t{j}"], kind, cfg, x,
+                               positions=positions, encoder_out=encoder_out,
+                               aux=aux0)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return x, aux0
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def forward(params, cfg: ModelConfig, tokens, *, encoder_out=None,
+            positions=None, last_only: bool = False):
+    """tokens (B, S) -> logits (f32), aux. ``last_only`` returns (B, vocab)
+    for the final position only (the realistic prefill output)."""
+    x, aux = forward_hidden(params, cfg, tokens, encoder_out=encoder_out,
+                            positions=positions)
+    if last_only:
+        x = x[:, -1:]
+    logits = x.astype(jnp.float32) @ _head_matrix(params, cfg).astype(jnp.float32)
+    logits = shard_logits(logits)
+    return (logits[:, 0] if last_only else logits), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+            encoder_out=None, window: Optional[int] = None):
+    """Fused prefill: ONE full-sequence forward that also emits the decode
+    cache (KV buffers at ring-addressed slots, SSM/RG-LRU states after the
+    last position). Equivalent to feeding the prompt token-by-token through
+    ``decode_step`` but one pass instead of P recurrent steps.
+
+    tokens: (B, P) with P <= effective cache length. Returns
+    (last-position logits (B, vocab) f32, cache matching
+    :func:`cache_spec`)."""
+    if window is not None and cfg.attention is not None:
+        # a ring-buffer serve cache of size `window` == windowed attention:
+        # the fused pass must not see keys the sequential path has evicted
+        sw = cfg.attention.sliding_window
+        cfg = cfg.replace(attention=dataclasses.replace(
+            cfg.attention, sliding_window=min(sw, window) if sw else window))
+    B, P = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+    positions = jnp.arange(P, dtype=jnp.int32)[None].repeat(B, 0)
+    if "pos_embed" in params:
+        max_len = params["pos_embed"]["pos"].shape[0]
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[
+            jnp.minimum(positions, max_len - 1)]
+    if cfg.encoder is not None and encoder_out is not None:
+        from repro.models.encdec import encoder_forward
+        encoder_out = encoder_forward(params["encoder"], cfg, encoder_out)
+
+    nb, rem_kinds = _pattern_split(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+    x = shard_activations(x)
+    cache: Dict[str, Any] = {}
+
+    def block_body(carry, bp):
+        x, aux = carry
+        entries = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux, entries[f"l{j}"] = _apply_layer(
+                bp[f"l{j}"], kind, cfg, x, positions=positions,
+                encoder_out=encoder_out, aux=aux, cache_len=cache_len,
+                window=window)
+        return (shard_activations(x), aux), entries
+
+    if nb > 0:
+        if cfg.scan_layers:
+            (x, aux0), blocks = jax.lax.scan(block_body, (x, aux0),
+                                             params["blocks"])
+        else:
+            outs = []
+            for i in range(nb):
+                bp = jax.tree.map(lambda p: p[i], params["blocks"])
+                (x, aux0), e = block_body((x, aux0), bp)
+                outs.append(e)
+            blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        cache["blocks"] = blocks
+    if rem_kinds:
+        cache["tail"] = {}
+        for j, kind in enumerate(rem_kinds):
+            x, aux0, cache["tail"][f"t{j}"] = _apply_layer(
+                params["tail"][f"t{j}"], kind, cfg, x, positions=positions,
+                encoder_out=encoder_out, aux=aux0, cache_len=cache_len,
+                window=window)
+
+    x = _apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = x.astype(jnp.float32) @ _head_matrix(params, cfg).astype(jnp.float32)
+    return logits[:, 0], cache
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, *, encoder_out=None,
+            seq_chunk: int = 0):
+    """Mean next-token cross-entropy + MoE aux, computed in sequence chunks.
+
+    The (B, chunk, vocab) logits block is the only vocab-sized temporary —
+    rematerialized in the backward pass — so the full (B, S, vocab) f32
+    logits tensor (40 GB/device at 4k×152k vocab) never exists."""
+    x, aux = forward_hidden(params, cfg, tokens, encoder_out=encoder_out)
+    W = _head_matrix(params, cfg)
+    B, S, D = x.shape
+    chunk = min(seq_chunk or cfg.xent_chunk, S)
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(tot, xs):
+        xi, li = xs                                   # (B, C, D), (B, C)
+        logits = xi.astype(jnp.float32) @ W.astype(jnp.float32)
+        logits = shard_logits(logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)      # (B, C)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    nll = total / (B * S)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg: ModelConfig, kind: str, batch: int, length: int,
+                      window: Optional[int]):
+    cd = cfg.compute_dtype
+    eff = min(length, window) if window else length
+    a = _attn_cfg(cfg, kind) if kind in ("attn", "local", "selfcross") else None
+    if kind in ("attn", "local"):
+        if a.sliding_window:
+            eff = min(eff, a.sliding_window)
+        return attn_mod.kv_cache_spec(batch, eff, a, cd)
+    if kind == "selfcross":
+        eff2 = min(eff, cfg.max_target_positions) if cfg.max_target_positions else eff
+        s = attn_mod.kv_cache_spec(batch, eff2, a, cd)
+        src = cfg.encoder.source_len
+        s["ck"] = jax.ShapeDtypeStruct((batch, src, a.num_kv_heads, a.head_dim), cd)
+        s["cv"] = jax.ShapeDtypeStruct((batch, src, a.num_kv_heads, a.head_dim), cd)
+        return s
+    if kind == "cross":
+        a = cfg.attention
+        src = cfg.cross_attn.source_len
+        return {"ck": jax.ShapeDtypeStruct((batch, src, a.num_kv_heads, a.head_dim), cd),
+                "cv": jax.ShapeDtypeStruct((batch, src, a.num_kv_heads, a.head_dim), cd)}
+    if kind == "ssm":
+        return ssm_mod.ssm_state_spec(batch, cfg.d_model, cfg.ssm, cd)
+    if kind == "rglru":
+        return rglru_mod.rglru_state_spec(batch, cfg.d_model, cfg.rglru, cd)
+    raise ValueError(kind)
+
+
+def _stack_sds(spec, n):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, length: int,
+               window: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct tree for the full decode cache (KV + SSM/LRU states)."""
+    nb, rem_kinds = _pattern_split(cfg)
+    out: Dict[str, Any] = {}
+    if nb > 0:
+        out["blocks"] = {
+            f"l{j}": _stack_sds(_layer_cache_spec(cfg, kind, batch, length, window), nb)
+            for j, kind in enumerate(cfg.layer_pattern)}
+    if rem_kinds:
+        out["tail"] = {f"t{j}": _layer_cache_spec(cfg, kind, batch, length, window)
+                       for j, kind in enumerate(rem_kinds)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int,
+               window: Optional[int] = None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, length, window))
+
+
+def _cross_attend(lp, a, cfg, h, ck, cv):
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype))
+    if a.qk_norm:
+        q = L.rmsnorm(lp["q_norm"], q)
+    a_x = dataclasses.replace(a, causal=False, sliding_window=None)
+    src_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    out = attn_mod._grouped_sdpa(q, ck, cv, a_x, jnp.zeros((1,), jnp.int32),
+                                 src_pos, cfg.compute_dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(out.dtype))
+
+
+def _apply_layer_decode(lp, lc, kind: str, cfg: ModelConfig, x, index,
+                        window: Optional[int]):
+    cd = cfg.compute_dtype
+    h = _apply_norm(cfg, lp["ln1"], x)
+    if kind in ("attn", "local"):
+        a = _attn_cfg(cfg, kind)
+        # the cache is always addressed as a ring buffer: when its length
+        # covers the full sequence this reduces exactly to linear addressing
+        mix, new_c = attn_mod.decode_attention(lp["attn"], a, h, lc, index,
+                                               compute_dtype=cd,
+                                               window=lc["k"].shape[1])
+        x = x + mix.astype(x.dtype)
+    elif kind == "ssm":
+        mix, new_c = ssm_mod.ssm_step(lp["ssm"], cfg.ssm, cfg.d_model, h,
+                                      lc, compute_dtype=cd)
+        x = x + mix.astype(x.dtype)
+    elif kind == "rglru":
+        mix, new_c = rglru_mod.rglru_step(lp["rglru"], cfg.rglru, cfg.d_model,
+                                          h, lc, compute_dtype=cd)
+        x = x + mix.astype(x.dtype)
+    elif kind == "cross":
+        mix = _cross_attend(lp["cross_attn"], cfg.attention, cfg, h,
+                            lc["ck"], lc["cv"])
+        if "gate_attn" in lp:
+            mix = jnp.tanh(lp["gate_attn"]).astype(mix.dtype) * mix
+        x = x + mix.astype(x.dtype)
+        new_c = lc
+    elif kind == "selfcross":
+        self_c = {"k": lc["k"], "v": lc["v"]}
+        mix, new_self = attn_mod.decode_attention(lp["attn"], cfg.attention, h,
+                                                  self_c, index,
+                                                  compute_dtype=cd,
+                                                  window=lc["k"].shape[1])
+        x = x + mix.astype(x.dtype)
+        hx = _apply_norm(cfg, lp["lnx"], x)
+        x = x + _cross_attend(lp["cross_attn"], cfg.attention, cfg, hx,
+                              lc["ck"], lc["cv"]).astype(x.dtype)
+        new_c = dict(new_self, ck=lc["ck"], cv=lc["cv"])
+    else:
+        raise ValueError(kind)
+
+    if "ffn" in lp:
+        h2 = _apply_norm(cfg, lp["ln2"], x)
+        if cfg.moe is not None:
+            out, _ = moe_mod.moe_ffn(lp["ffn"], cfg.moe, h2, cfg.act)
+        else:
+            out = L.mlp(lp["ffn"], h2, cfg.act)
+        if kind == "cross" and "gate_ffn" in lp:
+            out = jnp.tanh(lp["gate_ffn"]).astype(out.dtype) * out
+        x = x + out.astype(x.dtype)
+    return x, new_c
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, index, *,
+                window: Optional[int] = None):
+    """One decode step: token (B,) int32, cache from :func:`init_cache`,
+    ``index`` = current absolute position. Returns (logits (B, vocab), cache)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], cfg.compute_dtype)
+    if "pos_embed" in params:
+        pos_idx = jnp.minimum(index, params["pos_embed"]["pos"].shape[0] - 1)
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[pos_idx][None, None]
+
+    nb, rem_kinds = _pattern_split(cfg)
+    new_cache: Dict[str, Any] = {}
+
+    if nb > 0:
+        def body(x, xs):
+            bp, bc = xs
+            nc = {}
+            for j, kind in enumerate(cfg.layer_pattern):
+                x, nc[f"l{j}"] = _apply_layer_decode(bp[f"l{j}"], bc[f"l{j}"],
+                                                     kind, cfg, x, index, window)
+            return x, nc
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        else:
+            outs = []
+            for i in range(nb):
+                bp = jax.tree.map(lambda p: p[i], params["blocks"])
+                bc = jax.tree.map(lambda c: c[i], cache["blocks"])
+                x, nci = body(x, (bp, bc))
+                outs.append(nci)
+            new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["blocks"] = new_blocks
+    if rem_kinds:
+        new_cache["tail"] = {}
+        for j, kind in enumerate(rem_kinds):
+            x, new_cache["tail"][f"t{j}"] = _apply_layer_decode(
+                params["tail"][f"t{j}"], cache["tail"][f"t{j}"], kind, cfg, x,
+                index, window)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = x.astype(jnp.float32) @ params["lm_head"]["w"].astype(jnp.float32)
+    return logits[:, 0], new_cache

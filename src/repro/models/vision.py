@@ -1,0 +1,38 @@
+"""VLM frontend stub helpers (Llama-3.2-Vision).
+
+Per the assignment carve-out the ViT/SigLIP vision encoder + projector are
+NOT implemented; ``input_specs()`` provides precomputed patch embeddings of
+shape (B, n_patches, d_model) that the gated cross-attention layers (kind
+'cross' in transformer.py) consume directly as ``encoder_out``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+
+def patch_embedding_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct for the stubbed vision-encoder output."""
+    assert cfg.cross_attn is not None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.cross_attn.source_len, cfg.d_model), cfg.compute_dtype)
+
+
+def dummy_patch_embeddings(key, cfg: ModelConfig, batch: int):
+    sds = patch_embedding_spec(cfg, batch)
+    return jax.random.normal(key, sds.shape, sds.dtype) * 0.02
+
+
+def frame_embedding_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct for the stubbed audio (mel+conv) frontend output."""
+    assert cfg.encoder is not None
+    d = cfg.encoder.d_model or cfg.d_model
+    return jax.ShapeDtypeStruct((batch, cfg.encoder.source_len, d),
+                                cfg.compute_dtype)
+
+
+def dummy_frame_embeddings(key, cfg: ModelConfig, batch: int):
+    sds = frame_embedding_spec(cfg, batch)
+    return jax.random.normal(key, sds.shape, sds.dtype) * 0.02

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, sgd, sgd_momentum, adamw, make_optimizer
+from repro.optim.schedules import warmup_cosine, constant, pegasos_schedule
+
+__all__ = ["Optimizer", "sgd", "sgd_momentum", "adamw", "make_optimizer",
+           "warmup_cosine", "constant", "pegasos_schedule"]

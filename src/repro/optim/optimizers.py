@@ -1,0 +1,102 @@
+"""Pytree optimizers (no optax in this environment).
+
+Functional API: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step) -> (new_params, new_state)``.
+All element-wise, so they broadcast transparently over the gossip peer axis
+(the leading stacked dim of per-peer parameters).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_zeros_like
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    name: str
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    if max_norm <= 0:
+        return grads
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads)
+
+
+def sgd(lr_schedule, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        grads = _clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(step)
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def sgd_momentum(lr_schedule, momentum: float = 0.9, grad_clip: float = 0.0,
+                 momentum_dtype=jnp.bfloat16) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params)}
+
+    def update(grads, state, params, step):
+        grads = _clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(step)
+        m = jax.tree.map(lambda mo, g: (momentum * mo.astype(jnp.float32)
+                                        + g.astype(jnp.float32)).astype(momentum_dtype),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, mo: (p - lr * mo.astype(jnp.float32)).astype(p.dtype),
+                           params, m)
+        return new, {"m": m}
+
+    return Optimizer(init, update, "sgdm")
+
+
+def adamw(lr_schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": tree_zeros_like(jax.tree.map(lambda p: p.astype(jnp.float32), params)),
+                "v": tree_zeros_like(jax.tree.map(lambda p: p.astype(jnp.float32), params))}
+
+    def update(grads, state, params, step):
+        grads = _clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(step)
+        t = step.astype(jnp.float32) + 1.0 if hasattr(step, "astype") else float(step) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        def upd(p, mo, vo):
+            u = (mo / bc1) / (jnp.sqrt(vo / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def make_optimizer(name: str, lr_schedule, *, grad_clip: float = 1.0,
+                   weight_decay: float = 0.1) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr_schedule, grad_clip)
+    if name == "sgdm":
+        return sgd_momentum(lr_schedule, grad_clip=grad_clip)
+    if name == "adamw":
+        return adamw(lr_schedule, grad_clip=grad_clip, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    LogicalRules,
+    default_rules,
+    partition_spec,
+    params_pspecs,
+    cache_pspecs,
+    named_sharding_tree,
+)
+
+__all__ = [
+    "LogicalRules",
+    "default_rules",
+    "partition_spec",
+    "params_pspecs",
+    "cache_pspecs",
+    "named_sharding_tree",
+]

@@ -1,0 +1,140 @@
+"""Activation sharding constraints.
+
+XLA's sharding propagation, given only input/param shardings, can settle on
+a batch-replicated / feature-sharded fixpoint for the activations (observed
+on the 16×16 mesh: full-batch f32 logits all-reduced across the mesh). The
+fix is standard: pin the activation layout at module boundaries with
+``with_sharding_constraint``.
+
+The context is set by the step builders (launch/specs.py) around tracing;
+model code calls the ``shard_*`` helpers, which are no-ops when no context
+is active (CPU tests, single-device runs). Under the gossip optimizer the
+peer axis is handled by ``vmap(..., spmd_axis_name=...)`` and the inner
+context uses ``batch_axes=()`` (per-peer batch replicated within the peer's
+device group).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+from jax import lax
+
+
+@dataclass
+class _ActCtx:
+    mesh_sizes: dict
+    batch_axes: Tuple[str, ...]
+    model_axis: str = "model"
+    mesh: object = None
+
+
+_CTX: Optional[_ActCtx] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Tuple[str, ...],
+                        model_axis: str = "model"):
+    global _CTX
+    prev = _CTX
+    _CTX = _ActCtx(dict(zip(mesh.axis_names, mesh.devices.shape)),
+                   tuple(batch_axes), model_axis, mesh)
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def current_ctx() -> Optional[_ActCtx]:
+    """The active activation-sharding context (mesh + axis layout), or None.
+    Used by modules that need manual shard_map blocks (MoE combine-reduce)."""
+    return _CTX
+
+
+def _axis_size(axes) -> int:
+    if _CTX is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([_CTX.mesh_sizes.get(a, 1) for a in axes]))
+
+
+def _constrain(x, spec_entries):
+    from jax.lax import with_sharding_constraint
+    while spec_entries and spec_entries[-1] is None:
+        spec_entries = spec_entries[:-1]
+    return with_sharding_constraint(x, PS(*spec_entries))
+
+
+def _batch_entry():
+    ba = _CTX.batch_axes
+    if not ba:
+        return None
+    return ba if len(ba) > 1 else ba[0]
+
+
+def shard_activations(x):
+    """(B, S, D) or (B, S): batch over the batch axes, rest replicated."""
+    if _CTX is None:
+        return x
+    b = x.shape[0]
+    entry = _batch_entry()
+    if entry is None or b % _axis_size(entry) != 0:
+        return x
+    return _constrain(x, [entry] + [None] * (x.ndim - 1))
+
+
+def shard_logits(x):
+    """(B, S, V) or (B, C, V): batch over batch axes, vocab over model."""
+    if _CTX is None:
+        return x
+    entries = [None] * x.ndim
+    entry = _batch_entry()
+    if entry is not None and x.shape[0] % _axis_size(entry) == 0:
+        entries[0] = entry
+    if x.shape[-1] % _axis_size(_CTX.model_axis) == 0:
+        entries[-1] = _CTX.model_axis
+    return _constrain(x, entries)
+
+
+def shard_heads(x, head_dim_index: int = 2):
+    """(B, S, H, hd): batch over batch axes, heads over model if divisible."""
+    if _CTX is None:
+        return x
+    entries = [None] * x.ndim
+    entry = _batch_entry()
+    if entry is not None and x.shape[0] % _axis_size(entry) == 0:
+        entries[0] = entry
+    if x.shape[head_dim_index] % _axis_size(_CTX.model_axis) == 0:
+        entries[head_dim_index] = _CTX.model_axis
+    return _constrain(x, entries)
+
+
+def shard_expert_buffer(buf, moe_sharding: str):
+    """(G, E, C, D) grouped dispatch buffer (or legacy (E, C, D)):
+    groups over the batch axes, experts over model => the token->expert
+    movement between the two layouts lowers to an all-to-all."""
+    if _CTX is None:
+        return buf
+    entries = [None] * buf.ndim
+    e_dim = buf.ndim - 3          # 1 for (G,E,C,D), 0 for (E,C,D)
+    if e_dim == 1:
+        entry = _batch_entry()
+        if entry is not None and buf.shape[0] % _axis_size(entry) == 0:
+            entries[0] = entry
+    if moe_sharding == "expert" and buf.shape[e_dim] % _axis_size(_CTX.model_axis) == 0:
+        entries[e_dim] = _CTX.model_axis
+    return _constrain(buf, entries)
+
+
+def shard_group_tokens(x):
+    """(G, Tg, D) grouped token block: groups over the batch axes."""
+    if _CTX is None:
+        return x
+    entry = _batch_entry()
+    if entry is None or x.shape[0] % _axis_size(entry) != 0:
+        return x
+    return _constrain(x, [entry] + [None] * (x.ndim - 1))

@@ -1,0 +1,207 @@
+"""Logical-axis -> PartitionSpec rules.
+
+Every parameter leaf carries logical axis names (see ``models/layers.py``).
+A :class:`LogicalRules` profile maps each logical name to an ordered list of
+candidate mesh axes; the first candidate that (a) divides the dimension size
+and (b) is not already used by another dim of the same tensor wins, otherwise
+the dim is replicated. This degrades gracefully across the heterogeneous
+assigned architectures (e.g. llama4's 40 heads don't divide a 16-way model
+axis -> heads fall back to replication while d_ff still shards).
+
+Profiles:
+  * ``tp_fsdp`` (default) — Megatron TP over 'model' + ZeRO-3 FSDP over
+    'data' ('pod','data' in multi-pod) for the big dims.
+  * ``tp_only`` — TP over 'model', replicated over 'data'; required by the
+    gossip optimizer where each data-rank (peer) owns a full, *divergent*
+    model copy (the peer dim itself is sharded over the peer axes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# leaves smaller than this are always replicated (norm scales, gates, ...)
+MIN_SHARD_ELEMS = 1 << 16
+
+
+@dataclass(frozen=True)
+class LogicalRules:
+    name: str
+    # logical axis -> candidate mesh axes, in priority order. A candidate may
+    # itself be a tuple of mesh axes (sharded over their product).
+    table: Dict[str, Tuple] = field(default_factory=dict)
+
+    def candidates(self, logical: Optional[str]):
+        if logical is None:
+            return ()
+        return self.table.get(logical, ())
+
+
+def _fsdp_axes(multi_pod: bool):
+    return (("pod", "data"), ("data",)) if multi_pod else (("data",),)
+
+
+def default_rules(*, multi_pod: bool = False, fsdp: bool = True,
+                  moe_sharding: str = "expert", peer_axes: Tuple[str, ...] = (),
+                  inference: bool = False):
+    """Build the standard rule table for a (pod?, data, model) mesh.
+
+    inference=True (the decode profile, EXPERIMENTS.md §Perf): weights are
+    *stationary* — big dims are 2D-sharded over ('model','data') (falling
+    back to 'model' when indivisible) and the FSDP 'embed' sharding is
+    dropped, so no weight is ever re-gathered per decoded token; matmul
+    contractions produce small activation psums instead. Storage stays fully
+    sharded (405B bf16 = ~3–4 GB/device on 256 chips)."""
+    if inference:
+        two_d = (("model", "data"), ("model",))
+        t = {
+            "vocab": (("model",),),
+            "embed": (),
+            "embed_table": (),
+            "ffn": two_d,
+            "heads": two_d,
+            "kv_heads": (("model",),),
+            "head_dim": (("data",),),
+            "expert": (("model",),) if moe_sharding == "expert" else (),
+            # 'expert' mode: E on model, d_ff_expert on data (2D);
+            # 'tensor' mode: d_ff_expert on (model, data)
+            "expert_ffn": two_d if moe_sharding == "tensor" else (("data",),),
+            "expert_router": (),
+            "layers": (),
+            "conv": (),
+            "state": (),
+            "peers": (),
+            "batch": (),
+            "seq": (),
+        }
+        return LogicalRules("tp2d_inference", t)
+    fsdp_c = _fsdp_axes(multi_pod) if fsdp else ()
+    # when gossiping, the peer axes must never shard parameter dims
+    fsdp_c = tuple(c for c in fsdp_c
+                   if not any(a in peer_axes for a in (c if isinstance(c, tuple) else (c,))))
+    t = {
+        "vocab": (("model",),) + fsdp_c,
+        "embed": fsdp_c,
+        "embed_table": (),          # see models/layers.embedding_spec
+        "ffn": (("model",),),
+        "heads": (("model",),),
+        "kv_heads": (("model",),),
+        "head_dim": (),
+        "expert": (("model",),) if moe_sharding == "expert" else (),
+        "expert_ffn": (("model",),) if moe_sharding == "tensor" else fsdp_c,
+        "expert_router": (),
+        "layers": (),
+        "conv": (),
+        "state": (),
+        "peers": (tuple(peer_axes),) if peer_axes else (),
+        # activations / inputs
+        "batch": ((("pod", "data") if multi_pod else ("data",)),),
+        "seq": (),
+    }
+    return LogicalRules("tp_fsdp" if fsdp else "tp_only", t)
+
+
+def partition_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   mesh_sizes: Dict[str, int], rules: LogicalRules) -> PS:
+    """Resolve one tensor's logical axes into a PartitionSpec."""
+    if int(np.prod(shape)) < MIN_SHARD_ELEMS and "peers" not in axes:
+        return PS()
+    used: set = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        chosen = None
+        for cand in rules.candidates(logical):
+            cand_t = cand if isinstance(cand, tuple) else (cand,)
+            size = int(np.prod([mesh_sizes[a] for a in cand_t]))
+            if dim % size == 0 and size > 1 and not (used & set(cand_t)):
+                chosen = cand_t if len(cand_t) > 1 else cand_t[0]
+                used.update(cand_t)
+                break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return PS(*out)
+
+
+def params_pspecs(axes_tree, sds_tree, mesh: Mesh, rules: LogicalRules):
+    """PartitionSpec tree for a params tree given its logical-axes tree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda ax, sds: partition_spec(sds.shape, ax, sizes, rules),
+        axes_tree, sds_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def cache_pspecs(cache_sds, mesh: Mesh, *, multi_pod: bool = False,
+                 profile: str = "context"):
+    """Heuristic PartitionSpecs for decode caches / recurrent states.
+
+    profile='context' (default — see EXPERIMENTS.md §Perf, decode hillclimb):
+      shard the KV *length* dim (the longest dim) over 'data'
+      (context-parallel decode: GSPMD turns the softmax/contraction over the
+      sharded length into small activation psums, and the weights stay
+      sharded — no per-token FSDP re-gather), then a heads-like dim over
+      'model'; batch stays unsharded. Falls back to batch-sharding when the
+      length dim does not divide (e.g. whisper's 1500-frame cross cache).
+
+    profile='batch' (the v0 baseline): shard the batch dim over
+    ('pod','data') when divisible, else the longest dim; plus a heads-like
+    dim over 'model'."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    bsz = int(np.prod([sizes[a] for a in batch_axes]))
+
+    def batch_dim(shape):
+        for bdim in (0, 1):
+            if shape[bdim] % bsz == 0 and shape[bdim] >= bsz:
+                return bdim
+        return None
+
+    def length_dim(shape):
+        ldim = int(np.argmax(shape))
+        if shape[ldim] % bsz == 0 and shape[ldim] >= 4 * bsz:
+            return ldim
+        return None
+
+    def one(sds):
+        shape = sds.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 3:
+            order = (length_dim, batch_dim) if profile == "context" \
+                else (batch_dim, length_dim)
+            for f in order:
+                d = f(shape)
+                if d is not None:
+                    spec[d] = batch_axes if multi_pod else "data"
+                    break
+            # additionally shard the first eligible dim over 'model'. For a
+            # 5D KV leaf this is the BATCH dim — deliberate: batch-over-model
+            # × length-over-data is the good 2D cache layout (each model
+            # shard attends for its batch slice; only (B,1,·) activations
+            # reshard around the attention block). Sharding head_dim over
+            # model instead was measured 135× WORSE (the q·k contraction
+            # over a sharded head_dim psums the full (B,KV,rep,1,S) logits
+            # per layer) — EXPERIMENTS.md §Perf decode iter A-3b.
+            for hdim in range(len(shape)):
+                if spec[hdim] is None and shape[hdim] % sizes["model"] == 0 \
+                        and shape[hdim] >= sizes["model"] and shape[hdim] <= 1024:
+                    spec[hdim] = "model"
+                    break
+        elif len(shape) == 2:
+            if shape[-1] % sizes["model"] == 0 and shape[-1] >= sizes["model"]:
+                spec[-1] = "model"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return PS(*spec)
+
+    return jax.tree.map(one, cache_sds)
+
+
+def named_sharding_tree(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,29 @@
+from repro.utils.tree import (
+    tree_axpy,
+    tree_add,
+    tree_scale,
+    tree_average,
+    tree_dot,
+    tree_norm,
+    tree_zeros_like,
+    tree_cast,
+    tree_size,
+    tree_bytes,
+)
+from repro.utils.metrics import Welford, cosine_similarity, zero_one_error
+
+__all__ = [
+    "tree_axpy",
+    "tree_add",
+    "tree_scale",
+    "tree_average",
+    "tree_dot",
+    "tree_norm",
+    "tree_zeros_like",
+    "tree_cast",
+    "tree_size",
+    "tree_bytes",
+    "Welford",
+    "cosine_similarity",
+    "zero_one_error",
+]

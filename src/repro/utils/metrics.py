@@ -1,0 +1,75 @@
+"""Evaluation metrics used by the paper's experimental section.
+
+- 0-1 error (misclassification ratio) — the paper's primary metric.
+- pairwise cosine similarity of the model population — Fig. 2 bottom row.
+- Welford online mean/variance for streaming bench statistics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def zero_one_error(w, X, y, bias=None):
+    """Misclassification ratio of linear model(s) ``w`` on test set (X, y).
+
+    ``w`` may be a single (d,) model or a (m, d) population; returns a scalar
+    or an (m,) vector respectively. Labels are in {-1, +1}.
+    """
+    scores = X @ w.T if w.ndim == 2 else X @ w
+    if bias is not None:
+        scores = scores + bias
+    preds = jnp.where(scores >= 0, 1.0, -1.0)
+    if w.ndim == 2:
+        return jnp.mean(preds != y[:, None], axis=0)
+    return jnp.mean(preds != y)
+
+
+def voted_error(W, X, y):
+    """0-1 error of majority voting over a model cache ``W`` of shape (c, d).
+
+    Implements VOTEDPREDICT (Algorithm 4): each cached model votes by the
+    sign of its score; prediction is the majority sign.
+    """
+    votes = jnp.where(X @ W.T >= 0, 1.0, 0.0)       # (n, c) in {0,1}
+    p_ratio = votes.mean(axis=1)                     # fraction of + votes
+    preds = jnp.where(p_ratio - 0.5 >= 0, 1.0, -1.0)
+    return jnp.mean(preds != y)
+
+
+def weighted_vote_error(W, X, y):
+    """0-1 error of the *weighted* vote sgn(Σ⟨w_i, x⟩) — Eqs. (7), (18), (19)."""
+    scores = X @ W.T                                  # (n, m)
+    preds = jnp.where(scores.sum(axis=1) >= 0, 1.0, -1.0)
+    return jnp.mean(preds != y)
+
+
+def cosine_similarity(W):
+    """Mean pairwise cosine similarity across the model population (m, d).
+
+    The paper tracks this to study convergence of the population (Fig. 2).
+    """
+    norms = jnp.linalg.norm(W, axis=1, keepdims=True)
+    Wn = W / jnp.maximum(norms, 1e-12)
+    G = Wn @ Wn.T                                     # (m, m)
+    m = W.shape[0]
+    off = (G.sum() - jnp.trace(G)) / (m * (m - 1))
+    return off
+
+
+class Welford:
+    """Streaming mean/std (host-side, used by the benchmark harness)."""
+
+    def __init__(self):
+        self.n = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    @property
+    def std(self) -> float:
+        return (self.m2 / self.n) ** 0.5 if self.n > 1 else 0.0

@@ -1,0 +1,99 @@
+"""Fused prefill == token-by-token decode_step prefill.
+
+One full-sequence pass must produce the same decode cache (KV slots, SSM /
+RG-LRU states) and next-token logits as feeding the prompt through the
+recurrent ``decode_step`` — across the architecture families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced_config
+from repro.models import transformer as T
+from repro.models import vision as V
+
+ARCHS = ["qwen3-1.7b", "mamba2-780m", "recurrentgemma-9b",
+         "whisper-medium", "llama-3.2-vision-11b"]
+
+
+def _encoder_out(cfg, batch):
+    if cfg.family == "vlm":
+        return V.dummy_patch_embeddings(jax.random.key(9), cfg, batch)
+    if cfg.family == "audio":
+        return V.dummy_frame_embeddings(jax.random.key(9), cfg, batch)
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fused_prefill_matches_sequential_decode(arch):
+    cfg = reduced_config(get_config(arch), vocab=256)
+    batch, P, max_len = 2, 10, 24
+    params = T.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, P)),
+                          jnp.int32)
+    enc = _encoder_out(cfg, batch)
+
+    # sequential: decode_step per prompt token (cross KV attached first,
+    # the way DecodeServer does)
+    cache = T.init_cache(cfg, batch, max_len)
+    if enc is not None:
+        _, fused0 = T.prefill(params, cfg, prompts[:, :1], max_len,
+                              encoder_out=enc)
+        # copy ONLY the cross-source entries (they are position-independent)
+        def put_cross(seq, fus):
+            for scope in ("blocks", "tail"):
+                if scope not in seq:
+                    continue
+                for lk, lv in seq[scope].items():
+                    for ck in ("ck", "cv"):
+                        if ck in lv:
+                            lv[ck] = fus[scope][lk][ck]
+        put_cross(cache, fused0)
+    logits_seq = None
+    for i in range(P):
+        logits_seq, cache = T.decode_step(params, cfg, prompts[:, i], cache,
+                                          jnp.int32(i))
+
+    logits_fused, cache_fused = T.prefill(params, cfg, prompts, max_len,
+                                          encoder_out=enc)
+
+    np.testing.assert_allclose(np.asarray(logits_fused),
+                               np.asarray(logits_seq), rtol=0.08, atol=0.08)
+    flat_s = jax.tree.leaves_with_path(cache)
+    flat_f = dict(jax.tree.leaves_with_path(cache_fused))
+    checked = 0
+    for path, leaf_s in flat_s:
+        leaf_f = flat_f[path]
+        assert leaf_f.shape == leaf_s.shape, path
+        np.testing.assert_allclose(np.asarray(leaf_f, np.float32),
+                                   np.asarray(leaf_s, np.float32),
+                                   rtol=0.08, atol=0.08,
+                                   err_msg=str(path))
+        checked += 1
+    assert checked >= 2
+
+
+def test_fused_prefill_ring_window():
+    """Prompt longer than the window: the fused cache must hold the LAST
+    `window` positions at ring slots, matching sequential decode."""
+    cfg = reduced_config(get_config("qwen3-1.7b"), vocab=128)
+    batch, P, win = 1, 13, 8
+    params = T.init_params(jax.random.key(1), cfg)
+    prompts = jnp.asarray(
+        np.random.default_rng(1).integers(0, 128, (batch, P)), jnp.int32)
+
+    cache = T.init_cache(cfg, batch, win, window=win)
+    logits_seq = None
+    for i in range(P):
+        logits_seq, cache = T.decode_step(params, cfg, prompts[:, i], cache,
+                                          jnp.int32(i), window=win)
+    logits_fused, cache_fused = T.prefill(params, cfg, prompts, win,
+                                          window=win)
+    np.testing.assert_allclose(np.asarray(logits_fused),
+                               np.asarray(logits_seq), rtol=0.08, atol=0.08)
+    for (p1, a), (p2, b) in zip(jax.tree.leaves_with_path(cache_fused),
+                                jax.tree.leaves_with_path(cache)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.08, atol=0.08, err_msg=str(p1))

@@ -1,0 +1,92 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gossip_merge as gm
+from repro.kernels import pegasos_update as pu
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n,d", [(1, 8), (7, 57), (32, 128), (33, 300),
+                                 (5, 1000)])
+@pytest.mark.parametrize("lam", [0.1, 1e-3])
+def test_pegasos_kernel_sweep(n, d, lam):
+    key = jax.random.key(n * d)
+    ks = jax.random.split(key, 4)
+    w = jax.random.normal(ks[0], (n, d), jnp.float32)
+    x = jax.random.normal(ks[1], (n, d), jnp.float32)
+    t = jax.random.randint(ks[2], (n,), 0, 100)
+    y = jnp.sign(jax.random.normal(ks[3], (n,)))
+    got_w, got_t = pu.pegasos_update(w, t, x, y, lam=lam, interpret=True)
+    exp_w, exp_t = ref.pegasos_update_ref(w, t, x, y, lam)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(exp_w),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(exp_t))
+
+
+@pytest.mark.parametrize("n,d", [(4, 16), (19, 257), (8, 512)])
+def test_merge_update_kernel_sweep(n, d):
+    key = jax.random.key(n + d)
+    ks = jax.random.split(key, 6)
+    w1 = jax.random.normal(ks[0], (n, d), jnp.float32)
+    w2 = jax.random.normal(ks[1], (n, d), jnp.float32)
+    x = jax.random.normal(ks[2], (n, d), jnp.float32)
+    t1 = jax.random.randint(ks[3], (n,), 0, 40)
+    t2 = jax.random.randint(ks[4], (n,), 0, 40)
+    y = jnp.sign(jax.random.normal(ks[5], (n,)))
+    got_w, got_t = gm.merge_update(w1, t1, w2, t2, x, y, lam=0.01,
+                                   interpret=True)
+    exp_w, exp_t = ref.merge_update_ref(w1, t1, w2, t2, x, y, 0.01)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(exp_w),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(exp_t))
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 2, 2, 32),      # MHA
+    (2, 128, 4, 2, 64),      # GQA 2:1
+    (1, 256, 8, 1, 64),      # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, window):
+    key = jax.random.key(B * S + H)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    got = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             blk_q=64, blk_k=64, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, hd = 1, 128, 2, 1, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(jnp.bfloat16)
+    got = fa.flash_attention(q, k, v, causal=True, blk_q=64, blk_k=64,
+                             interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), atol=3e-2)
+
+
+def test_flash_attention_odd_head_dim_padding():
+    key = jax.random.key(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 48), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 48), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 48), jnp.float32)
+    got = fa.flash_attention(q, k, v, causal=True, blk_q=32, blk_k=32,
+                             interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-4)

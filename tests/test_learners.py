@@ -1,0 +1,67 @@
+"""Unit tests for the online learners (Algorithm 3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.learners import (LinearModel, adaline_update, init_model,
+                                 logistic_update, pegasos_update)
+
+
+def test_init_model_zero():
+    m = init_model(5)
+    assert m.w.shape == (5,) and float(jnp.abs(m.w).sum()) == 0.0
+    assert int(m.t) == 0
+
+
+def test_pegasos_update_margin_violation():
+    m = LinearModel(jnp.zeros(3), jnp.int32(0))
+    x = jnp.array([1.0, 0.0, 0.0])
+    new = pegasos_update(m, x, 1.0, lam=0.1)
+    # t=1, eta=1/(0.1*1)=10; margin 0 < 1 -> w = 0*(1-1) + 10*1*x = 10 x...
+    # decay = 1 - eta*lam = 0 -> w = eta*y*x = 10*x
+    np.testing.assert_allclose(np.asarray(new.w), [10.0, 0.0, 0.0], atol=1e-6)
+    assert int(new.t) == 1
+
+
+def test_pegasos_update_no_violation_only_decays():
+    w0 = jnp.array([5.0, 0.0])
+    m = LinearModel(w0, jnp.int32(9))
+    x = jnp.array([1.0, 0.0])
+    new = pegasos_update(m, x, 1.0, lam=0.1)   # margin = 5 >= 1
+    eta = 1.0 / (0.1 * 10)
+    np.testing.assert_allclose(np.asarray(new.w), np.asarray((1 - eta * 0.1) * w0),
+                               rtol=1e-6)
+
+
+def test_pegasos_population_matches_loop():
+    rng = np.random.default_rng(1)
+    N, d = 17, 9
+    W = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    t = jnp.asarray(rng.integers(0, 30, N), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    y = jnp.sign(jnp.asarray(rng.normal(size=N), jnp.float32))
+    pop = pegasos_update(LinearModel(W, t), X, y, lam=0.01)
+    for i in range(N):
+        one = pegasos_update(LinearModel(W[i], t[i]), X[i], y[i], lam=0.01)
+        np.testing.assert_allclose(np.asarray(pop.w[i]), np.asarray(one.w),
+                                   rtol=2e-5, atol=1e-6)
+        assert int(pop.t[i]) == int(one.t)
+
+
+def test_adaline_converges_to_regression_target():
+    rng = np.random.default_rng(2)
+    d = 6
+    w_true = rng.normal(size=d)
+    m = init_model(d)
+    for i in range(3000):
+        x = jnp.asarray(rng.normal(size=d), jnp.float32)
+        y = float(np.dot(np.asarray(x), w_true))
+        m = adaline_update(m, x, y, eta=0.05)
+    np.testing.assert_allclose(np.asarray(m.w), w_true, atol=0.15)
+
+
+def test_logistic_update_direction():
+    m = LinearModel(jnp.zeros(2), jnp.int32(0))
+    x = jnp.array([1.0, 2.0])
+    new = logistic_update(m, x, 1.0, eta=0.1)
+    assert float(new.w @ x) > 0  # moved toward classifying +1 correctly

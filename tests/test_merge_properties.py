@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis) for Section V's equivalences.
+
+These are the paper's core mathematical claims:
+  Eq. (6): regression voting == prediction of the averaged model;
+  Eq. (7): weighted-vote classification == sign of the averaged model score;
+  Eq. (8): Adaline update of the average == average of the updates;
+  Pegasos: the same commutation holds iff both ancestors classify the
+           example the same way (the UM-vs-MU discussion of Section V-B).
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core.learners import LinearModel, adaline_update, pegasos_update
+from repro.core.merge import create_model_mu, create_model_um, merge
+
+FLOATS = st.floats(-3.0, 3.0, allow_nan=False, width=32)
+
+
+def vecs(n, d):
+    return arrays(np.float32, (n, d), elements=FLOATS)
+
+
+@settings(max_examples=30, deadline=None)
+@given(W=vecs(5, 4), x=arrays(np.float32, (4,), elements=FLOATS))
+def test_eq6_average_model_equals_mean_vote(W, x):
+    scores = W @ x
+    avg_model_score = np.mean(W, axis=0) @ x
+    np.testing.assert_allclose(np.mean(scores), avg_model_score,
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(W=vecs(7, 5), x=arrays(np.float32, (5,), elements=FLOATS))
+def test_eq7_weighted_vote_equals_sign_of_average(W, x):
+    scores = W @ x
+    # weighted vote: weights |<w,x>|, votes sgn<w,x>  ->  sgn(mean score)
+    weighted = np.mean(np.abs(scores) * np.sign(scores))
+    assert np.sign(weighted) == np.sign(np.mean(scores)) or np.isclose(
+        np.mean(scores), 0.0, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(W=vecs(6, 4), x=arrays(np.float32, (4,), elements=FLOATS),
+       y=st.sampled_from([-1.0, 1.0]), eta=st.floats(0.01, 0.5))
+def test_eq8_adaline_update_commutes_with_averaging(W, x, y, eta):
+    xs = jnp.asarray(x)
+    # update every model then average
+    upd = [adaline_update(LinearModel(jnp.asarray(w), jnp.int32(0)), xs, y, eta).w
+           for w in W]
+    avg_of_upd = np.mean(np.stack([np.asarray(u) for u in upd]), axis=0)
+    # update the averaged model
+    wbar = LinearModel(jnp.asarray(np.mean(W, axis=0)), jnp.int32(0))
+    upd_of_avg = np.asarray(adaline_update(wbar, xs, y, eta).w)
+    np.testing.assert_allclose(avg_of_upd, upd_of_avg, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(w1=arrays(np.float32, (4,), elements=FLOATS),
+       w2=arrays(np.float32, (4,), elements=FLOATS),
+       x=arrays(np.float32, (4,), elements=FLOATS),
+       y=st.sampled_from([-1.0, 1.0]),
+       t=st.integers(1, 20))
+def test_pegasos_um_equals_mu_iff_same_classification(w1, w2, x, y, t):
+    """Section V-B: update/merge commute exactly when both ancestors
+    classify (x, y) the same way (same hinge-branch)."""
+    lam = 0.1
+    m1 = LinearModel(jnp.asarray(w1), jnp.int32(t))
+    m2 = LinearModel(jnp.asarray(w2), jnp.int32(t))
+    xs = jnp.asarray(x)
+    upd = lambda m, xx, yy: pegasos_update(m, xx, yy, lam)
+    mu = create_model_mu(upd, m1, m2, xs, y)
+    um = create_model_um(upd, m1, m2, xs, y)
+    viol1 = float(y * (w1 @ x)) < 1.0
+    viol2 = float(y * (w2 @ x)) < 1.0
+    wbar = (w1 + w2) / 2.0
+    violbar = float(y * (wbar @ x)) < 1.0
+    if viol1 == viol2 == violbar:
+        np.testing.assert_allclose(np.asarray(mu.w), np.asarray(um.w),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(w1=arrays(np.float32, (3,), elements=FLOATS),
+       w2=arrays(np.float32, (3,), elements=FLOATS),
+       t1=st.integers(0, 50), t2=st.integers(0, 50))
+def test_merge_semantics(w1, w2, t1, t2):
+    m = merge(LinearModel(jnp.asarray(w1), jnp.int32(t1)),
+              LinearModel(jnp.asarray(w2), jnp.int32(t2)))
+    np.testing.assert_allclose(np.asarray(m.w), (w1 + w2) / 2, rtol=1e-6,
+                               atol=1e-30)  # atol for subnormal inputs
+    assert int(m.t) == max(t1, t2)

@@ -1,0 +1,152 @@
+"""§Perf machinery: decode sharding profiles, grouped MoE dispatch,
+gossip merge exchange dtypes. Pure-logic + 1-device tests (no 512-device
+env needed)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.config.base import MoEConfig
+from repro.core.gossip_optimizer import gossip_merge
+from repro.models import layers as L
+from repro.models.moe import moe_ffn, moe_spec
+from repro.sharding.rules import cache_pspecs, default_rules, partition_spec
+
+
+# ---------------------------------------------------------------------------
+# cache profiles (the decode hillclimb, EXPERIMENTS.md §Perf A-1)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+
+
+def test_cache_context_profile_shards_length_and_batch_over_model():
+    kv = {"k": jax.ShapeDtypeStruct((36, 128, 32768, 8, 128), jnp.bfloat16)}
+    ps = cache_pspecs(kv, _FakeMesh(), profile="context")["k"]
+    assert ps[2] == "data"     # KV length over data (context parallel)
+    # batch over model — attention-parallel across the model axis; sharding
+    # head_dim instead was measured 135x worse (EXPERIMENTS.md §Perf A-3b)
+    assert ps[1] == "model"
+
+
+def test_cache_batch_profile_shards_batch():
+    kv = {"k": jax.ShapeDtypeStruct((36, 128, 32768, 8, 128), jnp.bfloat16)}
+    ps = cache_pspecs(kv, _FakeMesh(), profile="batch")["k"]
+    assert ps[1] == "data"
+
+
+def test_cache_context_falls_back_to_batch_when_length_indivisible():
+    # whisper cross cache: 1500 frames % 16 != 0
+    kv = {"ck": jax.ShapeDtypeStruct((128, 1500, 16, 64), jnp.bfloat16)}
+    ps = cache_pspecs(kv, _FakeMesh(), profile="context")["ck"]
+    assert ps[0] == "data"                 # batch fallback
+
+
+def test_inference_rules_2d_ffn():
+    rules = default_rules(inference=True)
+    sizes = {"data": 16, "model": 16}
+    ps = partition_spec((4096, 12288), ("embed", "ffn"), sizes, rules)
+    assert ps == PS(None, ("model", "data"))   # 2D where divisible
+    ps = partition_spec((16384, 128, 128), ("embed", "heads", "head_dim"),
+                        sizes, rules)
+    # heads=128 cannot take 256 -> falls back to model; head_dim takes data
+    assert ps == PS(None, "model", "data")
+
+
+# ---------------------------------------------------------------------------
+# grouped MoE dispatch == ungrouped when nothing drops (B-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_grouped_dispatch_matches_ungrouped(groups):
+    m1 = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                   capacity_factor=8.0, dispatch_groups=1)
+    mg = dataclasses.replace(m1, dispatch_groups=groups)
+    params = L.init_params(jax.random.key(0), moe_spec(16, m1, "swiglu"))
+    x = jax.random.normal(jax.random.key(1), (4, 8, 16), jnp.float32)
+    o1, a1 = moe_ffn(params, m1, x, "swiglu")
+    og, ag = moe_ffn(params, mg, x, "swiglu")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(og),
+                               rtol=2e-5, atol=2e-5)
+    assert float(a1["drop_fraction"]) == 0.0 == float(ag["drop_fraction"])
+
+
+def test_grouped_dispatch_capacity_is_per_group():
+    # tight capacity: grouped capacity must be computed from group tokens,
+    # not global tokens (the global-capacity bug of EXPERIMENTS.md §Perf B-1)
+    m = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                  capacity_factor=1.0, dispatch_groups=4)
+    params = L.init_params(jax.random.key(0), moe_spec(8, m, "gelu"))
+    x = jax.random.normal(jax.random.key(1), (4, 16, 8), jnp.float32)
+    out, aux = moe_ffn(params, m, x, "gelu")
+    assert out.shape == x.shape
+    assert 0.0 <= float(aux["drop_fraction"]) < 0.7
+
+
+# ---------------------------------------------------------------------------
+# gossip merge (C-2/C-3)
+# ---------------------------------------------------------------------------
+
+
+def test_gossip_merge_static_perm_take_path():
+    params = {"w": jnp.arange(16.0)[:, None] * jnp.ones((16, 4))}
+    perm = tuple(np.arange(16) ^ 1)
+    merged = gossip_merge(params, perm)
+    np.testing.assert_allclose(np.asarray(merged["w"][0]), 0.5)
+    np.testing.assert_allclose(float(merged["w"].sum()),
+                               float(params["w"].sum()), rtol=1e-6)
+
+
+def test_gossip_merge_bf16_exchange_close_to_f32():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)}
+    perm = tuple(np.arange(8) ^ 1)
+    a = gossip_merge(params, perm)
+    b = gossip_merge(params, perm, exchange_dtype=jnp.bfloat16)
+    # the partner contribution is quantized; bound the relative error
+    err = float(jnp.max(jnp.abs(a["w"] - b["w"])))
+    assert err < 0.02
+    # self-contribution is NOT quantized: merging with identity perm in
+    # bf16 still averages x with quantize(x) -> error bounded by bf16 eps
+    ident = tuple(range(8))
+    c = gossip_merge(params, ident, exchange_dtype=jnp.bfloat16)
+    assert float(jnp.max(jnp.abs(c["w"] - params["w"]))) < 0.02
+
+
+def test_gossip_merge_rejects_mismatched_mesh_size_gracefully():
+    # peer axis size != len(perm) -> falls back to the take path
+    params = {"w": jnp.ones((4, 8))}
+    out = gossip_merge(params, (1, 0, 3, 2), mesh=None, peer_axes=("data",))
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# windowed chunked attention (SWA hillclimb)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("win,chunk", [(8, 16), (16, 8), (64, 16), (None, 16), (7, 16)])
+def test_chunked_sdpa_windowed_key_slicing_matches_full(win, chunk):
+    from repro.config.base import AttentionConfig
+    from repro.models import attention as A
+    rng = np.random.default_rng(0)
+    S = 64
+    a = AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=8,
+                        sliding_window=win, causal=True)
+    q = jnp.asarray(rng.normal(size=(2, S, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, 2, 8)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = A._grouped_sdpa(q, k, v, a, pos, pos, jnp.float32)
+    out = A._chunked_sdpa(q, k, v, a, pos, jnp.float32, chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

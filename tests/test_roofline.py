@@ -1,0 +1,75 @@
+"""Roofline machinery unit tests (HLO collective parser, MODEL_FLOPS)."""
+import numpy as np
+import pytest
+
+from repro.config import INPUT_SHAPES, get_config
+from repro.launch.roofline import (model_flops_for, parse_collectives,
+                                   _shape_bytes)
+
+HLO = """
+HloModule jit_step
+  %all-reduce.1 = f32[16,4096,2048]{2,1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = bf16[2048,9496]{1,0} all-gather(%w), replica_groups=[16,16]<=[256], dimensions={0}
+  %reduce-scatter.3 = f32[128]{0} reduce-scatter(%g), replica_groups={{0,1}}, to_apply=%add
+  %all-to-all.4 = bf16[16,1280,5120]{2,1,0} all-to-all(%buf), replica_groups={{0,1,2,3,4,5,6,7}}
+  %collective-permute.5 = f32[64]{0} collective-permute(%p), source_target_pairs={{0,1}}
+  %cp-start = (f32[8]{0}, f32[8]{0}) collective-permute-start(%q), source_target_pairs={{0,1}}
+  ROOT %t = f32[] constant(0)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,4096,2048") == 16 * 4096 * 2048 * 4
+    assert _shape_bytes("bf16", "8") == 16
+    assert _shape_bytes("pred", "") == 1
+
+
+def test_parse_collectives_ops_and_groups():
+    st = parse_collectives(HLO)
+    assert st.count["all-reduce"] == 1
+    assert st.count["all-gather"] == 1
+    assert st.count["reduce-scatter"] == 1
+    assert st.count["all-to-all"] == 1
+    assert st.count["collective-permute"] >= 1
+    ar = 16 * 4096 * 2048 * 4
+    assert st.per_op["all-reduce"] == ar
+    # all-gather operand = result / group-size (iota groups [16,16])
+    ag = 2048 * 9496 * 2
+    assert st.per_op["all-gather"] == ag // 16
+    # reduce-scatter operand = result * group-size
+    assert st.per_op["reduce-scatter"] == 128 * 4 * 2
+    # wire model: all-reduce = 2*res*(g-1)/g
+    assert st.wire_bytes > 0
+
+
+def test_model_flops_dense_vs_moe():
+    dense = get_config("qwen3-8b")
+    moe = get_config("mixtral-8x22b")
+    sh = INPUT_SHAPES["train_4k"]
+    f_dense = model_flops_for(dense, sh)
+    toks = sh.global_batch * sh.seq_len
+    np.testing.assert_allclose(f_dense, 6.0 * dense.param_count() * toks)
+    # MoE active params far below total
+    assert moe.active_param_count() < 0.45 * moe.param_count()
+    f_moe = model_flops_for(moe, sh)
+    assert f_moe == 6.0 * moe.active_param_count() * toks
+
+
+def test_param_counts_plausible():
+    cases = {
+        "qwen3-8b": (7e9, 10e9),
+        "qwen3-1.7b": (1.4e9, 2.4e9),
+        "llama3-405b": (3.7e11, 4.4e11),
+        "mamba2-780m": (6e8, 9e8),
+        "mixtral-8x22b": (1.2e11, 1.6e11),
+    }
+    for arch, (lo, hi) in cases.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n:.3e} outside [{lo:.0e},{hi:.0e}]"
+
+
+def test_decode_model_flops_counts_one_token():
+    cfg = get_config("qwen3-1.7b")
+    sh = INPUT_SHAPES["decode_32k"]
+    f = model_flops_for(cfg, sh)
+    assert f == 2.0 * cfg.active_param_count() * sh.global_batch

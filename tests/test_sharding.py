@@ -1,0 +1,84 @@
+"""Sharding-rule unit tests: divisibility fallbacks, profiles, cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.sharding.rules import (LogicalRules, cache_pspecs, default_rules,
+                                  partition_spec)
+
+SIZES = {"data": 16, "model": 16}
+SIZES_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_ffn_shards_on_model():
+    r = default_rules()
+    ps = partition_spec((4096, 12288), ("embed", "ffn"), SIZES, r)
+    assert ps == PS("data", "model")
+
+
+def test_indivisible_heads_fall_back_to_replication():
+    """llama4-scout: 40 heads % 16 != 0 -> heads dim replicated."""
+    r = default_rules()
+    ps = partition_spec((5120, 40, 128), ("embed", "heads", "head_dim"), SIZES, r)
+    assert ps == PS("data", None) or ps == PS("data")
+
+
+def test_kv_heads_8_on_16way_model_axis_replicated():
+    r = default_rules()
+    ps = partition_spec((4096, 8, 128), ("embed", "kv_heads", "head_dim"),
+                        SIZES, r)
+    assert ps[1] is None if len(ps) > 1 else True
+
+
+def test_small_params_always_replicated():
+    r = default_rules()
+    ps = partition_spec((2048,), ("embed",), SIZES, r)
+    assert ps == PS()
+
+
+def test_expert_profile_shards_expert_dim():
+    r = default_rules(moe_sharding="expert")
+    ps = partition_spec((16, 5120, 8192), ("expert", "embed", "expert_ffn"),
+                        SIZES, r)
+    assert ps[0] == "model"
+
+
+def test_tensor_profile_shards_expert_ffn():
+    r = default_rules(moe_sharding="tensor")
+    ps = partition_spec((8, 6144, 16384), ("expert", "embed", "expert_ffn"),
+                        SIZES, r)
+    assert len(ps) == 3 and ps[0] is None and ps[2] == "model"
+
+
+def test_no_double_use_of_one_mesh_axis():
+    r = default_rules()
+    ps = partition_spec((4096, 4096), ("ffn", "ffn"), SIZES, r)
+    used = [p for p in ps if p is not None]
+    assert len(used) <= 1
+
+
+def test_multi_pod_fsdp_uses_pod_and_data():
+    r = default_rules(multi_pod=True)
+    ps = partition_spec((16384, 53248), ("embed", "ffn"), SIZES_MP, r)
+    assert ps[0] == ("pod", "data")
+
+
+def test_gossip_peer_axes_excluded_from_fsdp():
+    r = default_rules(peer_axes=("data",))
+    ps = partition_spec((4096, 12288), ("embed", "ffn"), SIZES, r)
+    assert ps[0] is None or ps[0] == "model"  # 'data' reserved for peers
+
+
+def test_embed_table_never_fsdp():
+    r = default_rules()
+    ps = partition_spec((151936, 2048), ("vocab", "embed_table"), SIZES, r)
+    assert ps == PS("model")
+
+
+def test_cache_pspec_batch_sharded():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sds = {"k": jax.ShapeDtypeStruct((2, 128, 32, 8, 128), np.float32)}
+    # on a 1x1 mesh everything degrades to replication without error
+    specs = cache_pspecs(sds, mesh)
+    assert isinstance(specs["k"], PS)

@@ -1,0 +1,128 @@
+"""Protocol-simulator invariants + paper-claim system tests."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gossip_linear import GossipLinearConfig
+from repro.core import cache as cache_mod
+from repro.core.peer_sampling import (hypercube_partner, perfect_matching,
+                                      uniform_peers)
+from repro.core.simulation import churn_trace, init_state, run_simulation
+from repro.data.synthetic import make_linear_dataset
+
+import jax
+
+
+def small_cfg(**kw):
+    base = dict(name="toy", dim=16, n_nodes=64, n_test=64,
+                class_ratio=(1, 1), lam=1e-3, variant="mu")
+    base.update(kw)
+    return GossipLinearConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def toy_data():
+    rng = np.random.default_rng(0)
+    X, y = make_linear_dataset(rng, 128, 16, noise=0.02, separation=3.0)
+    return X[:64], y[:64], X[64:], y[64:]
+
+
+def test_uniform_peers_never_self():
+    for seed in range(5):
+        dst = np.asarray(uniform_peers(jax.random.key(seed), 33))
+        assert np.all(dst != np.arange(33))
+        assert dst.min() >= 0 and dst.max() < 33
+
+
+def test_perfect_matching_is_involution():
+    dst = np.asarray(perfect_matching(jax.random.key(0), 40))
+    assert np.all(dst[dst] == np.arange(40))
+    assert np.all(dst != np.arange(40))
+
+
+def test_hypercube_partner_mixes():
+    n = 16
+    seen = set()
+    for s in range(4):
+        p = hypercube_partner(s, n)
+        assert np.all(p[p] == np.arange(n))
+        seen.add(tuple(p))
+    assert len(seen) == 4  # four distinct dimensions
+
+
+def test_churn_trace_online_fraction():
+    rng = np.random.default_rng(0)
+    m = churn_trace(rng, 500, 400, 0.9)
+    frac = m.mean()
+    assert 0.84 < frac < 0.96
+
+
+def test_cache_ring_buffer():
+    c = cache_mod.init_cache(2, 3, 4)
+    for i in range(5):
+        w = jnp.full((2, 4), float(i + 1))
+        c = cache_mod.cache_add(c, jnp.array([True, i % 2 == 0]),
+                                w, jnp.full((2,), i + 1, jnp.int32))
+    w, t = cache_mod.freshest(c)
+    assert float(w[0, 0]) == 5.0
+    assert int(c.count[0]) == 3  # capped at cache size
+
+
+def test_mu_converges_and_beats_rw(toy_data):
+    X, y, Xt, yt = toy_data
+    res_mu = run_simulation(small_cfg(variant="mu"), X, y, Xt, yt,
+                            cycles=40, eval_every=40, seed=1)
+    res_rw = run_simulation(small_cfg(variant="rw"), X, y, Xt, yt,
+                            cycles=40, eval_every=40, seed=1)
+    assert res_mu.err_fresh[-1] < res_rw.err_fresh[-1] + 0.02
+    assert res_mu.err_fresh[-1] < 0.2
+
+
+def test_voting_helps_rw(toy_data):
+    """Fig. 3's claim: local voting significantly improves RW."""
+    X, y, Xt, yt = toy_data
+    res = run_simulation(small_cfg(variant="rw"), X, y, Xt, yt,
+                         cycles=30, eval_every=30, seed=2)
+    assert res.err_voted[-1] <= res.err_fresh[-1] + 0.02
+
+
+def test_failure_robustness_still_converges(toy_data):
+    """Fig. 1 lower row: extreme drop+delay slows but does not break MU."""
+    X, y, Xt, yt = toy_data
+    hard = small_cfg(variant="mu", drop_prob=0.5, delay_max_cycles=10,
+                     online_fraction=0.9)
+    res = run_simulation(hard, X, y, Xt, yt, cycles=80, eval_every=80, seed=3)
+    assert res.err_fresh[-1] < 0.35  # converging despite 50% drop + 10Δ delay
+
+
+def test_similarity_increases(toy_data):
+    X, y, Xt, yt = toy_data
+    res = run_simulation(small_cfg(variant="mu"), X, y, Xt, yt,
+                         cycles=60, eval_every=20, seed=4)
+    assert res.similarity[-1] > res.similarity[0] - 0.05
+    assert res.similarity[-1] > 0.5  # models converge to each other
+
+
+def test_message_accounting():
+    """delivered + overflow <= sent (drops/offline account for the rest)."""
+    from repro.core.simulation import simulate_cycle
+    import jax
+    n, d = 32, 8
+    X = jnp.zeros((n, d))
+    y = jnp.ones((n,))
+    st = init_state(n, d, 4, 1)
+    online = jnp.ones((n,), bool)
+    sent = delivered = 0
+    key = jax.random.key(0)
+    for c in range(10):
+        key, sub = jax.random.split(key)
+        st, stats = simulate_cycle(st, X, y, online, sub, variant="mu",
+                                   learner="pegasos", lam=1e-2, eta=0.1,
+                                   drop=0.0, delay_max=1, k_rounds=6,
+                                   sampler="uniform")
+        sent += int(stats["sent"])
+        delivered += int(stats["delivered"]) + int(stats["overflow"])
+    # all sent messages from cycles 0..8 must be delivered by cycle 9
+    assert delivered >= sent - n  # last cycle's sends still in flight

@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's headline claims, executed on CPU at reduced scale:
+  1. gossip learning converges to the quality of centralized Pegasos;
+  2. merging (MU) converges much faster than independent random walks (RW);
+  3. the system keeps converging under extreme failures (drop/delay/churn);
+  4. the Layer-B gossip optimizer trains a transformer to the same loss
+     region as exact all-reduce data parallelism;
+  5. end-to-end serving produces identical results to the training-side
+     forward pass (consistency across the stack).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gossip_linear import GossipLinearConfig
+from repro.core.ensemble import run_sequential_pegasos
+from repro.core.simulation import run_simulation
+from repro.data.synthetic import make_linear_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    X, y = make_linear_dataset(rng, 256, 24, noise=0.03, separation=3.0)
+    return X[:192], y[:192], X[192:], y[192:]
+
+
+def cfg(**kw):
+    base = dict(name="sys", dim=24, n_nodes=192, n_test=64,
+                class_ratio=(1, 1), lam=1e-3, variant="mu")
+    base.update(kw)
+    return GossipLinearConfig(**base)
+
+
+def test_gossip_reaches_centralized_quality(data):
+    X, y, Xt, yt = data
+    _, pts = run_sequential_pegasos(X, y, Xt, yt, iters=5000, lam=1e-3)
+    central = pts[-1][1]
+    res = run_simulation(cfg(), X, y, Xt, yt, cycles=120, eval_every=120,
+                         seed=0)
+    assert res.err_voted[-1] <= central + 0.08, \
+        f"gossip {res.err_voted[-1]} vs centralized {central}"
+
+
+def test_mu_much_faster_than_rw(data):
+    """Fig. 1: at a fixed early cycle budget MU is far ahead of RW."""
+    X, y, Xt, yt = data
+    early = 25
+    mu = run_simulation(cfg(variant="mu"), X, y, Xt, yt, cycles=early,
+                        eval_every=early, seed=1)
+    rw = run_simulation(cfg(variant="rw"), X, y, Xt, yt, cycles=early,
+                        eval_every=early, seed=1)
+    assert mu.err_fresh[-1] < rw.err_fresh[-1] - 0.03, \
+        f"MU {mu.err_fresh[-1]} not clearly ahead of RW {rw.err_fresh[-1]}"
+
+
+def test_extreme_failures_slow_but_do_not_break(data):
+    X, y, Xt, yt = data
+    ok = run_simulation(cfg(), X, y, Xt, yt, cycles=100, eval_every=100, seed=2)
+    af = run_simulation(cfg(drop_prob=0.5, delay_max_cycles=10,
+                            online_fraction=0.9),
+                        X, y, Xt, yt, cycles=100, eval_every=100, seed=2)
+    assert af.err_fresh[-1] < 0.30          # still converging
+    assert ok.err_fresh[-1] <= af.err_fresh[-1] + 0.05  # failures never help
+
+
+def test_gossip_transformer_matches_allreduce_loss():
+    from repro.launch.train import train
+    _, h_ar = train("qwen3-1.7b", reduced=True, steps=40, batch=8, seq_len=32,
+                    lr=3e-3, dist="allreduce", log_every=40, seed=0,
+                    d_model=128)
+    _, h_go = train("qwen3-1.7b", reduced=True, steps=40, batch=8, seq_len=32,
+                    lr=3e-3, dist="gossip", n_peers=4, merge="mu",
+                    log_every=40, seed=0, d_model=128)
+    ar, go = h_ar[-1][1], h_go[-1][1]
+    assert abs(ar - go) < 0.8, f"allreduce {ar} vs gossip {go}"
+    assert h_go[-1][2] < 0.3  # peers agree
+
+
+def test_serve_matches_training_forward():
+    from repro.config import get_config, reduced_config
+    from repro.launch.serve import DecodeServer
+    from repro.models import transformer as T
+    cfg_ = reduced_config(get_config("qwen3-1.7b"))
+    cfg_ = cfg_.replace(compute_dtype=jnp.float32)
+    params = T.init_params(jax.random.key(0), cfg_)
+    srv = DecodeServer(cfg_, params, batch=2, max_len=24)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg_.vocab_size, (2, 12))
+    logits, _ = srv.prefill(prompts)
+    full, _ = T.forward(params, cfg_, jnp.asarray(prompts, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, -1]), atol=2e-3)

@@ -1,0 +1,40 @@
+"""Theorem 1 empirical validation (the MU convergence bound)."""
+import numpy as np
+import pytest
+
+from repro.core.theory import mu_chain_regret, solve_w_star, svm_objective
+from repro.data.synthetic import make_linear_dataset
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(0)
+    X, y = make_linear_dataset(rng, 150, 12, noise=0.02, separation=3.0)
+    return X, y
+
+
+def test_w_star_is_near_optimal(problem):
+    X, y = problem
+    lam = 0.01
+    w_star = solve_w_star(X, y, lam)
+    f_star = float(svm_objective(w_star, X, y, lam))
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        w = w_star + 0.05 * rng.normal(size=w_star.shape)
+        assert float(svm_objective(np.asarray(w, np.float32), X, y, lam)) \
+            >= f_star - 1e-4
+
+
+def test_theorem1_bound_holds(problem):
+    X, y = problem
+    tr = mu_chain_regret(X, y, lam=0.01, steps=250, seed=0)
+    assert tr.holds, "Theorem 1 bound violated"
+    # the bound decays ~ log t / t; the empirical average regret must track it
+    assert tr.avg_regret[-1] <= tr.bound[-1]
+    assert tr.bound[-1] < tr.bound[9]
+
+
+def test_average_regret_decreases(problem):
+    X, y = problem
+    tr = mu_chain_regret(X, y, lam=0.01, steps=300, seed=1)
+    assert tr.avg_regret[-1] < tr.avg_regret[19]

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS","") + " --xla_force_host_platform_device_count=512"
+import sys, re, collections
+import jax
+from repro.config import get_config, INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_step
+from repro.launch.costs import _unrolled, _measure
+from repro.launch import roofline as RL
+
+arch = sys.argv[1] if len(sys.argv)>1 else "qwen3-1.7b"
+shape_name = sys.argv[2] if len(sys.argv)>2 else "train_4k"
+periods = int(sys.argv[3]) if len(sys.argv)>3 else 1
+dist = sys.argv[4] if len(sys.argv)>4 else "allreduce"
+
+cfg = get_config(arch)
+from repro.launch.specs import resolve_variant
+shape = INPUT_SHAPES[shape_name]
+cfg, _ = resolve_variant(cfg, shape)
+ucfg = _unrolled(cfg, periods)
+mesh = make_production_mesh()
+fn, arg_sds, in_sh, _ = build_step(ucfg, shape, mesh, dist=dist, optimizer="adamw")
+with mesh:
+    compiled = jax.jit(fn, in_shardings=in_sh).lower(*arg_sds).compile()
+cost = compiled.cost_analysis()
+if isinstance(cost, list): cost = cost[0]
+print("flops/device", f"{cost.get('flops',0):.3e}", "bytes", f"{cost.get('bytes accessed',0):.3e}")
+for k,v in sorted(cost.items(), key=lambda kv:-abs(kv[1]) if isinstance(kv[1],float) else 0)[:10]:
+    print("  ", k, f"{v:.3e}" if isinstance(v,float) else v)
+text = compiled.as_text()
+# top collectives by result size
+rows=[]
+for line in text.splitlines():
+    m = RL._COLL_RE.search(line)
+    if not m or "-done(" in line: continue
+    b = RL._shape_bytes(m.group(1), m.group(2))
+    rows.append((b, m.group(3), m.group(1)+"["+m.group(2)+"]", line.strip()[:140]))
+rows.sort(reverse=True)
+agg = collections.Counter()
+for b,op,shp,_ in rows: agg[op]+=b
+print("collective result-bytes by op:", {k:f"{v:.3e}" for k,v in agg.items()}, "count", len(rows))
+for b,op,shp,l in rows[:15]:
+    print(f"  {b/1e6:9.1f}MB {op:20s} {shp:28s} {l[:100]}")

@@ -1,0 +1,52 @@
+"""Multi-device verification of the MoE combine-before-reduce path (§Perf
+B-4): combine='reduce' must equal combine='gather' through forward AND grad.
+
+Runs on 8 placeholder host devices — outside pytest because the test suite
+pins the device count to 1 (tests/conftest.py).
+
+    PYTHONPATH=src python tools/verify_moe_reduce.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import MoEConfig
+from repro.models.moe import moe_ffn, moe_spec
+from repro.models import layers as L
+from repro.sharding.act import activation_sharding
+
+
+def main() -> None:
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, capacity_factor=8.0,
+                   dispatch_groups=2, sharding="tensor", combine="gather")
+    mr = dataclasses.replace(mg, combine="reduce")
+    params = L.init_params(jax.random.key(0), moe_spec(16, mg, "swiglu"))
+    x = jax.random.normal(jax.random.key(1), (4, 8, 16), jnp.float32)
+
+    with mesh, activation_sharding(mesh, ("data",)):
+        og = jax.jit(lambda p, x: moe_ffn(p, mg, x, "swiglu")[0])(params, x)
+        orr = jax.jit(lambda p, x: moe_ffn(p, mr, x, "swiglu")[0])(params, x)
+        gg = jax.jit(jax.grad(
+            lambda p, x: moe_ffn(p, mg, x, "swiglu")[0].sum()))(params, x)
+        gr = jax.jit(jax.grad(
+            lambda p, x: moe_ffn(p, mr, x, "swiglu")[0].sum()))(params, x)
+
+    np.testing.assert_allclose(np.asarray(og), np.asarray(orr),
+                               rtol=2e-5, atol=2e-5)
+    for (path, a), (_, b) in zip(jax.tree.leaves_with_path(gg),
+                                 jax.tree.leaves_with_path(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4, err_msg=str(path))
+    print("OK: combine='reduce' == combine='gather' (forward + grad) "
+          "on a 2x4 (data, model) mesh")
+
+
+if __name__ == "__main__":
+    main()
