@@ -9,7 +9,7 @@ import argparse
 import time
 
 SUITES = ["table1", "fig1", "fig2", "fig3", "theory", "kernels",
-          "gossip_vs_allreduce", "roofline"]
+          "gossip_vs_allreduce", "roofline", "population_scaling"]
 
 
 def main() -> None:
@@ -46,6 +46,9 @@ def main() -> None:
     if "roofline" in only:
         from benchmarks import roofline_table
         roofline_table.run(args.quick)
+    if "population_scaling" in only:
+        from benchmarks import population_scaling
+        population_scaling.run(args.quick)
     print(f"benchmarks done in {time.time()-t0:.1f}s")
 
 

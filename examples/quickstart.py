@@ -9,6 +9,11 @@ independent-random-walk baseline (P2PegasosRW = sequential Pegasos).
 
 Expected: MU converges orders of magnitude faster than RW (the paper's
 headline Fig. 1 claim); voting helps RW a lot and MU a little (Fig. 3).
+
+``--engine sharded`` runs the same protocol on the sharded mega-population
+engine (``lax.scan`` over chunks of cycles, host-side routing, optional
+device-mesh node sharding) — same seed, same curves, built for N up to 10^6
+(see examples/million_nodes.py).
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ def main() -> None:
     ap.add_argument("--cycles", type=int, default=120)
     ap.add_argument("--dataset", default="spambase",
                     choices=["spambase", "reuters", "malicious-urls"])
+    ap.add_argument("--engine", default="reference",
+                    choices=["reference", "sharded"])
     args = ap.parse_args()
 
     X, y, Xt, yt, cfg = paper_dataset(args.dataset)
@@ -33,7 +40,8 @@ def main() -> None:
     for variant in ("rw", "mu"):
         c = dataclasses.replace(cfg, variant=variant)
         res = run_simulation(c, X, y, Xt, yt, cycles=args.cycles,
-                             eval_every=max(args.cycles // 8, 1), seed=0)
+                             eval_every=max(args.cycles // 8, 1), seed=0,
+                             engine=args.engine)
         print(f"\nP2Pegasos{variant.upper()}")
         print(f"  {'cycle':>6} {'err(fresh)':>11} {'err(voted)':>11} "
               f"{'model-similarity':>17}")

@@ -9,6 +9,7 @@ from repro.core.learners import (
 from repro.core.merge import merge, create_model, VARIANTS
 from repro.core.cache import ModelCache, init_cache, cache_add, freshest, voted_predict
 from repro.core.simulation import SimState, run_simulation, simulate_cycle, churn_trace
+from repro.core.sharded_engine import run_sharded_simulation
 from repro.core.ensemble import run_weighted_bagging, run_sequential_pegasos
 from repro.core.gossip_optimizer import (
     GossipState,
@@ -28,6 +29,7 @@ __all__ = [
     "logistic_update", "make_update", "merge", "create_model", "VARIANTS",
     "ModelCache", "init_cache", "cache_add", "freshest", "voted_predict",
     "SimState", "run_simulation", "simulate_cycle", "churn_trace",
+    "run_sharded_simulation",
     "run_weighted_bagging", "run_sequential_pegasos",
     "GossipState", "stack_for_peers", "unstack_mean", "gossip_merge",
     "peer_disagreement", "make_gossip_train_step", "make_allreduce_train_step",

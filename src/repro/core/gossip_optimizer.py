@@ -114,8 +114,10 @@ def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
             return ((x.astype(jnp.float32) + xin.astype(jnp.float32)) / 2.0).astype(x.dtype)
         return jax.tree.map(avg, tree)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=PS(axis), out_specs=PS(axis),
-                         axis_names=set(peer_axes), check_vma=False)(params)
+    from repro.sharding.compat import shard_map_compat
+    return shard_map_compat(body, mesh=mesh, in_specs=PS(axis),
+                            out_specs=PS(axis),
+                            manual_axes=set(peer_axes))(params)
 
 
 def peer_disagreement(params):

@@ -24,11 +24,20 @@ def uniform_peers(key, n: int):
 
 
 def perfect_matching(key, n: int):
-    """Random involution without fixed points (n even): pairs exchange."""
+    """Random involution: pairs exchange; odd N leaves one node unpaired.
+
+    For even N this is a fixed-point-free random matching (every node sends
+    to and receives from exactly one peer — the paper's PERFECT MATCHING
+    baseline). For odd N no perfect matching exists; the leftover node of the
+    random permutation maps to *itself*, which the simulator interprets as
+    "idle this cycle" (it neither sends nor receives — the natural extension
+    of the baseline's one-message-per-node semantics)."""
     perm = jax.random.permutation(key, n)
-    # pair consecutive elements of the random permutation
-    a, b = perm[0::2], perm[1::2]
-    dst = jnp.zeros((n,), jnp.int32).at[a].set(b).at[b].set(a)
+    # pair consecutive elements of the random permutation; odd N leaves
+    # perm[-1] out, and the init value `arange` keeps it a self-map (idle).
+    m = n - (n % 2)
+    a, b = perm[0:m:2], perm[1:m:2]
+    dst = jnp.arange(n, dtype=jnp.int32).at[a].set(b).at[b].set(a)
     return dst
 
 

@@ -63,13 +63,68 @@ def init_state(n: int, d: int, cache_size: int, delay_max: int) -> SimState:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "learner", "lam",
-                                             "eta", "drop", "delay_max",
-                                             "k_rounds", "sampler"))
-def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
-                   learner: str, lam: float, eta: float, drop: float,
-                   delay_max: int, k_rounds: int, sampler: str):
-    """One gossip cycle for the whole population. Returns (state, stats)."""
+def select_receivers(buf_dst, buf_arrival, online, clock, k_rounds: int):
+    """Winner-per-destination selection for up to ``k_rounds`` receives.
+
+    Integer-only (no payload touched): resolves which in-flight buffer slot
+    each node accepts in each of the K sequential receive rounds, exactly
+    reproducing the event-by-event winner semantics of ``simulate_cycle``.
+    Splitting this out lets the sharded engine run the cheap global scatter
+    here and the heavy per-node payload math in a sharded/fused pass.
+
+    Returns ``(src_slot, valid, delivered, overflow, lost)`` where
+    ``src_slot`` is (K, N) int32 into the flattened buffer, ``valid`` is
+    (K, N) bool, and ``lost`` counts messages due this cycle whose
+    destination is offline (they leave the system undelivered)."""
+    D, n = buf_dst.shape
+    flat_dst = buf_dst.reshape(-1)
+    flat_arr = buf_arrival.reshape(-1)
+    due = flat_arr == clock
+    arriving = due & online[flat_dst]
+    lost = (due & ~online[flat_dst]).sum()
+    slot_ids = jnp.arange(D * n, dtype=jnp.int32) + 1
+
+    remaining = arriving
+    delivered = jnp.zeros((), jnp.int32)
+    slots, valids = [], []
+    for _ in range(k_rounds):
+        tag = jnp.where(remaining, slot_ids, 0)
+        taken = jnp.zeros((n,), jnp.int32).at[flat_dst].max(tag)
+        valids.append(taken > 0)                # node receives this round
+        slots.append(jnp.maximum(taken - 1, 0))
+        win = remaining & (tag == taken[flat_dst]) & (taken[flat_dst] > 0)
+        remaining = remaining & ~win
+        delivered = delivered + win.sum()
+    overflow = remaining.sum()                  # arrivals beyond K rounds
+    return (jnp.stack(slots), jnp.stack(valids), delivered, overflow,
+            lost.astype(jnp.int32))
+
+
+def apply_receives(last_w, last_t, cache: ModelCache, msg_w, msg_t, valid,
+                   X, y, *, variant: str, update):
+    """Apply up to K sequential receives per node (Algorithm 1 ON RECEIVE).
+
+    For each valid (node, round): ``modelCache.add(createModel(m, lastModel));
+    lastModel <- m``. Purely per-node — no cross-node communication — and the
+    parity oracle for the sharded engine's scatter-free ``_vector_apply``
+    and the Pallas ``gossip_cycle`` kernel.
+
+    msg_w: (K, N, d); msg_t, valid: (K, N)."""
+    for k in range(msg_w.shape[0]):
+        has = valid[k]
+        m1 = LinearModel(msg_w[k], msg_t[k])
+        m2 = LinearModel(last_w, last_t)
+        new = create_model(variant, update, m1, m2, X, y)
+        cache = cache_mod.cache_add(cache, has, new.w, new.t)
+        last_w = jnp.where(has[:, None], m1.w, last_w)
+        last_t = jnp.where(has, m1.t, last_t)
+    return last_w, last_t, cache
+
+
+def cycle_core(state: SimState, X, y, online, key, *, variant: str,
+               learner: str, lam: float, eta: float, drop: float,
+               delay_max: int, k_rounds: int, sampler: str):
+    """One gossip cycle for the whole population (traceable core)."""
     n, d = state.last_w.shape
     D = delay_max
     update = make_update(learner, lam=lam, eta=eta)
@@ -84,33 +139,15 @@ def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
         y = y[:, rec]
 
     # ---- 1) deliveries -----------------------------------------------------
-    flat_dst = state.buf_dst.reshape(-1)
-    flat_arr = state.buf_arrival.reshape(-1)
+    src_slot, valid, delivered, overflow, lost = select_receivers(
+        state.buf_dst, state.buf_arrival, online, state.clock, k_rounds)
     flat_w = state.buf_w.reshape(-1, d)
     flat_t = state.buf_t.reshape(-1)
-    arriving = (flat_arr == state.clock) & online[flat_dst]
-    slot_ids = jnp.arange(D * n, dtype=jnp.int32) + 1
-
-    cache = state.cache
-    last_w, last_t = state.last_w, state.last_t
-    remaining = arriving
-    delivered = jnp.zeros((), jnp.int32)
-    for _ in range(k_rounds):
-        tag = jnp.where(remaining, slot_ids, 0)
-        taken = jnp.zeros((n,), jnp.int32).at[flat_dst].max(tag)
-        has = taken > 0                                 # (N,) node receives now
-        src_slot = jnp.maximum(taken - 1, 0)
-        m1 = LinearModel(flat_w[src_slot], flat_t[src_slot])
-        m2 = LinearModel(last_w, last_t)
-        new = create_model(variant, update, m1, m2, X, y)
-        cache = cache_mod.cache_add(cache, has, new.w, new.t)
-        last_w = jnp.where(has[:, None], m1.w, last_w)
-        last_t = jnp.where(has, m1.t, last_t)
-        win = remaining & (tag == taken[flat_dst]) & (taken[flat_dst] > 0)
-        remaining = remaining & ~win
-        delivered = delivered + win.sum()
-
-    overflow = remaining.sum()                          # arrivals beyond K rounds
+    msg_w = flat_w[src_slot]                    # (K, N, d) winning payloads
+    msg_t = flat_t[src_slot]
+    last_w, last_t, cache = apply_receives(
+        state.last_w, state.last_t, state.cache, msg_w, msg_t, valid, X, y,
+        variant=variant, update=update)
 
     # ---- 2) sends ----------------------------------------------------------
     fresh_w, fresh_t = cache_mod.freshest(cache)
@@ -120,7 +157,10 @@ def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
         dst = peer_sampling.uniform_peers(k_dst, n)
     delay = jax.random.randint(k_delay, (n,), 1, D + 1) if D > 1 else jnp.ones((n,), jnp.int32)
     dropped = jax.random.bernoulli(k_drop, drop, (n,)) if drop > 0 else jnp.zeros((n,), bool)
-    send_ok = online & ~dropped
+    # dst == self marks a node that idles this cycle (odd-N perfect matching
+    # leaves one node unpaired); it neither sends nor self-delivers.
+    idle = dst == jnp.arange(n, dtype=dst.dtype)
+    send_ok = online & ~dropped & ~idle
     arrival = jnp.where(send_ok, state.clock + delay, -1)
 
     slot = state.clock % D
@@ -130,9 +170,27 @@ def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
     buf_arrival = state.buf_arrival.at[slot].set(arrival)
 
     stats = {"delivered": delivered, "overflow": overflow,
-             "sent": send_ok.sum()}
+             "sent": send_ok.sum(), "lost": lost}
     return SimState(last_w, last_t, cache, buf_w, buf_t, buf_dst, buf_arrival,
                     state.clock + 1), stats
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "learner", "lam",
+                                             "eta", "drop", "delay_max",
+                                             "k_rounds", "sampler"))
+def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
+                   learner: str, lam: float, eta: float, drop: float,
+                   delay_max: int, k_rounds: int, sampler: str):
+    """One gossip cycle for the whole population. Returns (state, stats).
+
+    ``stats`` message economy (per cycle): every message sent at cycle c is
+    eventually exactly one of ``delivered`` (accepted by an online node),
+    ``lost`` (destination offline at the arrival cycle), or ``overflow``
+    (arrived beyond the K winner rounds) — so over a run,
+    ``sum(sent) == sum(delivered + lost + overflow) + in-flight``."""
+    return cycle_core(state, X, y, online, key, variant=variant,
+                      learner=learner, lam=lam, eta=eta, drop=drop,
+                      delay_max=delay_max, k_rounds=k_rounds, sampler=sampler)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +236,31 @@ class SimResult:
     similarity: List[float]     # mean pairwise cosine over eval-node models
     overflow_total: int
     config: GossipLinearConfig
+    sent_total: int = 0
+    delivered_total: int = 0
+    lost_total: int = 0         # arrived while destination offline
+
+
+def sim_setup(cfg: GossipLinearConfig, X, y, X_test, y_test, *, cycles: int,
+              seed: int, eval_nodes: int):
+    """Shared host-side setup for both engines.
+
+    Draws the churn trace and the eval-node subset from ONE ``default_rng``
+    stream in a fixed order, so ``engine="reference"`` and
+    ``engine="sharded"`` see identical scenarios for the same seed."""
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    online_mat = churn_trace(rng, n, cycles, cfg.online_fraction)
+    eval_idx = jnp.asarray(rng.choice(n, size=min(eval_nodes, n), replace=False))
+    return (online_mat, eval_idx,
+            jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+            jnp.asarray(X_test, jnp.float32), jnp.asarray(y_test, jnp.float32))
+
+
+def eval_points(cycles: int, eval_every: int) -> List[int]:
+    """The cycle counts after which both engines evaluate the population."""
+    return [c + 1 for c in range(cycles)
+            if (c + 1) % eval_every == 0 or c == cycles - 1]
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -196,22 +279,47 @@ def _eval(cache: ModelCache, eval_idx, X_test, y_test):
 def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                    cycles: int = 200, eval_every: int = 10, seed: int = 0,
                    eval_nodes: int = 100, sampler: str = "uniform",
-                   k_rounds: int = 4) -> SimResult:
+                   k_rounds: int = 4, engine: str = "reference",
+                   **engine_kwargs) -> SimResult:
     """Run the full protocol for ``cycles`` gossip cycles.
 
     ``X`` may be (N, d) — the paper's one-record-per-node model — or
-    (N, k, d) for k local records per node (Section II's generalization)."""
+    (N, k, d) for k local records per node (Section II's generalization).
+
+    ``engine`` selects the execution backend:
+
+    * ``"reference"`` (default) — one jitted ``simulate_cycle`` call per
+      cycle with a host-Python driver loop; simple, and the parity oracle.
+    * ``"sharded"`` — the mega-population engine
+      (:mod:`repro.core.sharded_engine`): ``lax.scan`` over chunks of
+      cycles between eval points (no host round-trip per cycle), the node
+      axis optionally sharded over a device mesh with ``shard_map``, and
+      the deliver→merge→update→cache-write step optionally fused into the
+      Pallas ``gossip_cycle`` kernel on TPU. Same random streams — for a
+      given seed it reproduces the reference error curves. Extra keyword
+      arguments (``mesh=``, ``use_pallas=``, ``interpret=``) are forwarded
+      to :func:`repro.core.sharded_engine.run_sharded_simulation`.
+    """
+    if engine == "sharded":
+        from repro.core.sharded_engine import run_sharded_simulation
+        return run_sharded_simulation(
+            cfg, X, y, X_test, y_test, cycles=cycles, eval_every=eval_every,
+            seed=seed, eval_nodes=eval_nodes, sampler=sampler,
+            k_rounds=k_rounds, **engine_kwargs)
+    if engine != "reference":
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'reference' or 'sharded')")
+    if engine_kwargs:
+        raise TypeError("unexpected keyword arguments for the reference "
+                        f"engine: {sorted(engine_kwargs)}")
+
     n, d = X.shape[0], X.shape[-1]
-    rng = np.random.default_rng(seed)
-    online_mat = churn_trace(rng, n, cycles, cfg.online_fraction)
-    eval_idx = jnp.asarray(rng.choice(n, size=min(eval_nodes, n), replace=False))
+    online_mat, eval_idx, X, y, X_test, y_test = sim_setup(
+        cfg, X, y, X_test, y_test, cycles=cycles, seed=seed,
+        eval_nodes=eval_nodes)
 
     state = init_state(n, d, cfg.cache_size, max(cfg.delay_max_cycles, 1))
     key = jax.random.key(seed)
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    X_test = jnp.asarray(X_test, jnp.float32)
-    y_test = jnp.asarray(y_test, jnp.float32)
 
     res = SimResult([], [], [], [], 0, cfg)
     for c in range(cycles):
@@ -223,6 +331,9 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             delay_max=max(cfg.delay_max_cycles, 1), k_rounds=k_rounds,
             sampler=sampler)
         res.overflow_total += int(stats["overflow"])
+        res.sent_total += int(stats["sent"])
+        res.delivered_total += int(stats["delivered"])
+        res.lost_total += int(stats["lost"])
         if (c + 1) % eval_every == 0 or c == cycles - 1:
             err_f, err_v, sim = _eval(state.cache, eval_idx, X_test, y_test)
             res.cycles.append(c + 1)

@@ -4,6 +4,8 @@ Validated in interpret mode on CPU against the pure-jnp oracles in ref.py;
 compiled by Mosaic on TPU backends. Use ``repro.kernels.ops`` for the
 public jit'd entry points.
 """
-from repro.kernels import flash_attention, gossip_merge, ops, pegasos_update, ref
+from repro.kernels import (flash_attention, gossip_cycle, gossip_merge, ops,
+                           pegasos_update, ref)
 
-__all__ = ["ops", "ref", "pegasos_update", "gossip_merge", "flash_attention"]
+__all__ = ["ops", "ref", "pegasos_update", "gossip_merge", "gossip_cycle",
+           "flash_attention"]

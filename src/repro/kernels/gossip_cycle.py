@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused gossip-cycle receive path (deliver -> merge ->
+update -> cache-write).
+
+One gossip cycle delivers up to K messages to every node; for each the
+protocol runs ``modelCache.add(createModel(m, lastModel)); lastModel <- m``
+(Algorithm 1). Executed as separate XLA ops that is, per round: read the
+message and the last model, write the merged+updated model, then read-modify-
+write the whole (N, C, d) cache — the cache traffic alone is C× the model
+traffic. This kernel keeps a node block's last model, its K winning messages,
+its local example AND its cache slice resident in VMEM and applies all K
+sequential receives in one pass: HBM traffic per node drops from
+O(K·(C+3)·d) to the minimal read-once/write-once O((K+C+2)·d).
+
+Supports the three CREATEMODEL variants (RW / MU / UM, Algorithm 2) with the
+Pegasos update — the paper's P2Pegasos hot path. The pure-jnp oracle is
+``repro.core.simulation.apply_receives``; parity is tested in interpret mode
+on CPU (tests/test_sharded_engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.pegasos_update import BLK_N, LANE, _pad_to
+
+C_SUB = 8          # pad the cache axis to the f32 sublane multiple
+
+
+def _pegasos(w, t, x, y, lam: float):
+    """(BLK, d) Pegasos step in f32 — mirrors Algorithm 3 lines 1-10."""
+    t = t + 1
+    eta = 1.0 / (lam * t.astype(jnp.float32))
+    margin = y * jnp.sum(w * x, axis=-1)
+    decay = (1.0 - eta * lam)[:, None]
+    upd = jnp.where((margin < 1.0)[:, None], (eta * y)[:, None] * x, 0.0)
+    return decay * w + upd, t
+
+
+def _cycle_kernel(msg_w_ref, msg_t_ref, valid_ref, x_ref, y_ref,
+                  last_w_ref, last_t_ref, cw_ref, ct_ref, ptr_ref, cnt_ref,
+                  out_lw, out_lt, out_cw, out_ct, out_ptr, out_cnt,
+                  *, variant: str, lam: float, c_real: int, k_rounds: int):
+    lw = last_w_ref[...].astype(jnp.float32)       # (BLK, d)
+    lt = last_t_ref[...]                           # (BLK,)
+    cw = cw_ref[...].astype(jnp.float32)           # (BLK, C_pad, d)
+    ct = ct_ref[...]                               # (BLK, C_pad)
+    ptr = ptr_ref[...]                             # (BLK,)
+    cnt = cnt_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    blk, c_pad = ct.shape
+
+    for kk in range(k_rounds):
+        vm = valid_ref[kk, :] > 0                  # (BLK,) receives this round
+        mw = msg_w_ref[kk, :, :].astype(jnp.float32)
+        mt = msg_t_ref[kk, :]
+        if variant == "mu":                        # update(merge(m, last))
+            nw, nt = _pegasos((mw + lw) / 2.0, jnp.maximum(mt, lt), x, y, lam)
+        elif variant == "um":                      # merge(update(m), update(last))
+            w1, t1 = _pegasos(mw, mt, x, y, lam)
+            w2, t2 = _pegasos(lw, lt, x, y, lam)
+            nw, nt = (w1 + w2) / 2.0, jnp.maximum(t1, t2)
+        else:                                      # rw: update(m)
+            nw, nt = _pegasos(mw, mt, x, y, lam)
+        # cache_add on the vm subset: one-hot write at slot ptr % C
+        slot = ptr % c_real
+        onehot = (lax.broadcasted_iota(jnp.int32, (blk, c_pad), 1)
+                  == slot[:, None]) & vm[:, None]
+        cw = jnp.where(onehot[:, :, None], nw[:, None, :], cw)
+        ct = jnp.where(onehot, nt[:, None], ct)
+        ptr = ptr + vm.astype(jnp.int32)
+        cnt = jnp.minimum(cnt + vm.astype(jnp.int32), c_real)
+        # lastModel <- received model
+        lw = jnp.where(vm[:, None], mw, lw)
+        lt = jnp.where(vm, mt, lt)
+
+    out_lw[...] = lw.astype(out_lw.dtype)
+    out_lt[...] = lt
+    out_cw[...] = cw.astype(out_cw.dtype)
+    out_ct[...] = ct
+    out_ptr[...] = ptr
+    out_cnt[...] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "lam", "interpret"))
+def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
+                        msg_w, msg_t, valid, x, y, *, variant: str,
+                        lam: float, interpret: bool = False):
+    """Fused K-receive apply for one cycle.
+
+    last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, d);
+    msg_t, valid: (K, N) int32; returns the updated
+    (last_w, last_t, cache_w, cache_t, ptr, count)."""
+    n, d = last_w.shape
+    _, c, _ = cache_w.shape
+    k = msg_w.shape[0]
+
+    pad_nd = lambda a: _pad_to(_pad_to(a, LANE, 1), BLK_N, 0)
+    pad_n = lambda a: _pad_to(a, BLK_N, 0)
+    lw, xp = pad_nd(last_w), pad_nd(x)
+    lt, yp = pad_n(last_t), pad_n(y)
+    cwp = _pad_to(_pad_to(_pad_to(cache_w, LANE, 2), C_SUB, 1), BLK_N, 0)
+    ctp = _pad_to(_pad_to(cache_t, C_SUB, 1), BLK_N, 0)
+    ptrp, cntp = pad_n(ptr), pad_n(count)
+    mw = _pad_to(_pad_to(msg_w, LANE, 2), BLK_N, 1)
+    mt = _pad_to(msg_t, BLK_N, 1)
+    vl = _pad_to(valid, BLK_N, 1)
+    np_, dp = lw.shape
+    cp = cwp.shape[1]
+    grid = (np_ // BLK_N,)
+
+    vec = pl.BlockSpec((BLK_N, dp), lambda i: (i, 0))
+    sca = pl.BlockSpec((BLK_N,), lambda i: (i,))
+    kvec = pl.BlockSpec((k, BLK_N, dp), lambda i: (0, i, 0))
+    ksca = pl.BlockSpec((k, BLK_N), lambda i: (0, i))
+    cvec = pl.BlockSpec((BLK_N, cp, dp), lambda i: (i, 0, 0))
+    csca = pl.BlockSpec((BLK_N, cp), lambda i: (i, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(_cycle_kernel, variant=variant, lam=lam,
+                          c_real=c, k_rounds=k),
+        grid=grid,
+        in_specs=[kvec, ksca, ksca, vec, sca, vec, sca, cvec, csca, sca, sca],
+        out_specs=[vec, sca, cvec, csca, sca, sca],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, dp), last_w.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_, cp, dp), cache_w.dtype),
+            jax.ShapeDtypeStruct((np_, cp), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mw, mt, vl, xp, yp, lw, lt, cwp, ctp, ptrp, cntp)
+    lw_n, lt_n, cw_n, ct_n, ptr_n, cnt_n = outs
+    return (lw_n[:n, :d], lt_n[:n], cw_n[:n, :c, :d], ct_n[:n, :c],
+            ptr_n[:n], cnt_n[:n])

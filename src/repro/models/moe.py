@@ -147,13 +147,14 @@ def moe_ffn(params, m: MoEConfig, x, act: str) -> Tuple[jnp.ndarray, Dict]:
             # opcode copy"); f32 is also the numerically right accumulator
             return jax.lax.psum(out.astype(jnp.float32), maxis).astype(out.dtype)
 
-        out = jax.shard_map(
+        from repro.sharding.compat import shard_map_compat
+        out = shard_map_compat(
             _down_combine, mesh=ctx.mesh,
             in_specs=(_PS(bentry, None, None, maxis), _PS(None, maxis, None),
                       _PS(bentry, None), _PS(bentry, None), _PS(bentry, None),
                       _PS(bentry, None, None)),
             out_specs=_PS(bentry, None, None),
-            axis_names=set(ctx.batch_axes) | {maxis}, check_vma=False,
+            manual_axes=set(ctx.batch_axes) | {maxis},
         )(h, w_down, flat_expert, safe_pos, keep, gate_vals)
     else:
         out_buf = jnp.einsum("gecf,efd->gecd", h,

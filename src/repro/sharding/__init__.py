@@ -1,3 +1,4 @@
+from repro.sharding.compat import shard_map_compat
 from repro.sharding.rules import (
     LogicalRules,
     default_rules,
@@ -8,6 +9,7 @@ from repro.sharding.rules import (
 )
 
 __all__ = [
+    "shard_map_compat",
     "LogicalRules",
     "default_rules",
     "partition_spec",

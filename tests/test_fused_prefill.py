@@ -11,6 +11,7 @@ import pytest
 from repro.config import get_config, reduced_config
 from repro.models import transformer as T
 from repro.models import vision as V
+from repro.utils.tree import tree_leaves_with_path
 
 ARCHS = ["qwen3-1.7b", "mamba2-780m", "recurrentgemma-9b",
          "whisper-medium", "llama-3.2-vision-11b"]
@@ -60,8 +61,8 @@ def test_fused_prefill_matches_sequential_decode(arch):
 
     np.testing.assert_allclose(np.asarray(logits_fused),
                                np.asarray(logits_seq), rtol=0.08, atol=0.08)
-    flat_s = jax.tree.leaves_with_path(cache)
-    flat_f = dict(jax.tree.leaves_with_path(cache_fused))
+    flat_s = tree_leaves_with_path(cache)
+    flat_f = dict(tree_leaves_with_path(cache_fused))
     checked = 0
     for path, leaf_s in flat_s:
         leaf_f = flat_f[path]
@@ -92,8 +93,8 @@ def test_fused_prefill_ring_window():
                                           window=win)
     np.testing.assert_allclose(np.asarray(logits_fused),
                                np.asarray(logits_seq), rtol=0.08, atol=0.08)
-    for (p1, a), (p2, b) in zip(jax.tree.leaves_with_path(cache_fused),
-                                jax.tree.leaves_with_path(cache)):
+    for (p1, a), (p2, b) in zip(tree_leaves_with_path(cache_fused),
+                                tree_leaves_with_path(cache)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=0.08, atol=0.08, err_msg=str(p1))

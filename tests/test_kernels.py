@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import gossip_cycle as gc
 from repro.kernels import gossip_merge as gm
 from repro.kernels import pegasos_update as pu
 from repro.kernels import ref
@@ -43,6 +44,49 @@ def test_merge_update_kernel_sweep(n, d):
     np.testing.assert_allclose(np.asarray(got_w), np.asarray(exp_w),
                                rtol=2e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(got_t), np.asarray(exp_t))
+
+
+@pytest.mark.parametrize("variant", ["mu", "um", "rw"])
+@pytest.mark.parametrize("n,c,d,k", [(6, 3, 10, 2), (33, 10, 57, 4),
+                                     (8, 5, 128, 1)])
+def test_gossip_cycle_kernel_sweep(variant, n, c, d, k):
+    """Fused deliver→merge→update→cache-write vs the apply_receives oracle."""
+    from repro.core.cache import ModelCache
+    from repro.core.learners import make_update
+    from repro.core.simulation import apply_receives
+
+    lam = 0.01
+    key = jax.random.key(n * d + c)
+    ks = jax.random.split(key, 8)
+    last_w = jax.random.normal(ks[0], (n, d), jnp.float32)
+    last_t = jax.random.randint(ks[1], (n,), 0, 30)
+    cache = ModelCache(jax.random.normal(ks[2], (n, c, d), jnp.float32),
+                       jax.random.randint(ks[3], (n, c), 0, 30),
+                       jax.random.randint(ks[4], (n,), 1, 3 * c),
+                       jnp.minimum(jax.random.randint(ks[4], (n,), 1, 3 * c), c))
+    msg_w = jax.random.normal(ks[5], (k, n, d), jnp.float32)
+    msg_t = jax.random.randint(ks[6], (k, n), 0, 30)
+    valid = jax.random.bernoulli(ks[7], 0.7, (k, n))
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    y = jnp.sign(jax.random.normal(ks[1], (n,)) + 0.1)
+
+    upd = make_update("pegasos", lam=lam)
+    exp_lw, exp_lt, exp_cache = apply_receives(
+        last_w, last_t, cache, msg_w, msg_t, valid, x, y,
+        variant=variant, update=upd)
+    got = gc.fused_receive_apply(
+        last_w, last_t, cache.w, cache.t, cache.ptr, cache.count,
+        msg_w, msg_t, valid.astype(jnp.int32), x, y,
+        variant=variant, lam=lam, interpret=True)
+    got_lw, got_lt, got_cw, got_ct, got_ptr, got_cnt = got
+    np.testing.assert_allclose(np.asarray(got_lw), np.asarray(exp_lw),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_lt), np.asarray(exp_lt))
+    np.testing.assert_allclose(np.asarray(got_cw), np.asarray(exp_cache.w),
+                               rtol=2e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_ct), np.asarray(exp_cache.t))
+    np.testing.assert_array_equal(np.asarray(got_ptr), np.asarray(exp_cache.ptr))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(exp_cache.count))
 
 
 @pytest.mark.parametrize("B,S,H,KV,hd", [

@@ -1,0 +1,77 @@
+"""Dependency-free coverage of Section V's equivalences (Eq. 7 / Eq. 8).
+
+``tests/test_merge_properties.py`` explores the same claims with hypothesis;
+that module skips entirely when hypothesis is not installed, so the seeded,
+parametrized checks here keep the paper's core mathematical equivalences
+covered on a bare environment.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.learners import LinearModel, adaline_update, pegasos_update
+from repro.core.merge import create_model_mu, create_model_um, merge
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("k,d", [(2, 4), (7, 5)])
+def test_eq7_weighted_vote_equals_sign_of_average(seed, k, d):
+    """Eq. (7): voting with weights |<w,x>| == sign of the averaged score."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(k, d)).astype(np.float32)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    scores = W @ x
+    weighted = np.mean(np.abs(scores) * np.sign(scores))
+    mean_score = np.mean(scores)
+    assert np.sign(weighted) == np.sign(mean_score) or np.isclose(
+        mean_score, 0.0, atol=1e-6)
+    # and the averaged *model* produces exactly that mean score (Eq. 6)
+    np.testing.assert_allclose(np.mean(W, axis=0) @ x, mean_score,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("y", [-1.0, 1.0])
+def test_eq8_adaline_update_commutes_with_averaging(seed, y):
+    """Eq. (8): Adaline's linear activation makes update/merge commute."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(6, 4)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    eta = float(rng.uniform(0.01, 0.5))
+    upd = [adaline_update(LinearModel(jnp.asarray(w), jnp.int32(0)), x, y, eta).w
+           for w in W]
+    avg_of_upd = np.mean(np.stack([np.asarray(u) for u in upd]), axis=0)
+    wbar = LinearModel(jnp.asarray(np.mean(W, axis=0)), jnp.int32(0))
+    upd_of_avg = np.asarray(adaline_update(wbar, x, y, eta).w)
+    np.testing.assert_allclose(avg_of_upd, upd_of_avg, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pegasos_um_equals_mu_when_same_hinge_branch(seed):
+    """Section V-B: Pegasos UM == MU iff all ancestors share the hinge branch."""
+    rng = np.random.default_rng(seed)
+    w1 = rng.normal(size=(4,)).astype(np.float32)
+    w2 = rng.normal(size=(4,)).astype(np.float32)
+    x = rng.normal(size=(4,)).astype(np.float32)
+    y = float(rng.choice([-1.0, 1.0]))
+    t = int(rng.integers(1, 20))
+    lam = 0.1
+    m1 = LinearModel(jnp.asarray(w1), jnp.int32(t))
+    m2 = LinearModel(jnp.asarray(w2), jnp.int32(t))
+    xs = jnp.asarray(x)
+    upd = lambda m, xx, yy: pegasos_update(m, xx, yy, lam)
+    mu = create_model_mu(upd, m1, m2, xs, y)
+    um = create_model_um(upd, m1, m2, xs, y)
+    viol1 = float(y * (w1 @ x)) < 1.0
+    viol2 = float(y * (w2 @ x)) < 1.0
+    violbar = float(y * (((w1 + w2) / 2.0) @ x)) < 1.0
+    if viol1 == viol2 == violbar:
+        np.testing.assert_allclose(np.asarray(mu.w), np.asarray(um.w),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_merge_semantics():
+    m = merge(LinearModel(jnp.asarray([1.0, 3.0]), jnp.int32(2)),
+              LinearModel(jnp.asarray([3.0, -1.0]), jnp.int32(7)))
+    np.testing.assert_allclose(np.asarray(m.w), [2.0, 1.0])
+    assert int(m.t) == 7

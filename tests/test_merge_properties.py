@@ -9,6 +9,12 @@ These are the paper's core mathematical claims:
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need hypothesis; "
+           "tests/test_merge_equivalences.py covers Eq. (7)/(8) without it")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra.numpy import arrays
 

@@ -1,0 +1,166 @@
+"""Sharded mega-population engine: parity with the reference engine.
+
+The sharded engine consumes the same host RNG stream and per-cycle key
+sequence as the reference driver and shares its cycle math, so for a given
+seed the error curves must reproduce the reference engine's (the acceptance
+bar is 0.02 at every eval point; in practice they are bitwise-equal)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gossip_linear import GossipLinearConfig
+from repro.core.sharded_engine import key_schedule
+from repro.core.simulation import run_simulation
+from repro.data.synthetic import make_linear_dataset
+
+
+def small_cfg(n_nodes=128, **kw):
+    base = dict(name="toy", dim=16, n_nodes=n_nodes, n_test=64,
+                class_ratio=(1, 1), lam=1e-3, variant="mu")
+    base.update(kw)
+    return GossipLinearConfig(**base)
+
+
+def toy(n=128, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 64, d, noise=0.05, separation=3.0)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def assert_curves_close(a, b, tol=0.02):
+    assert a.cycles == b.cycles
+    for xa, xb in zip(a.err_fresh, b.err_fresh):
+        assert abs(xa - xb) <= tol, (a.err_fresh, b.err_fresh)
+    for xa, xb in zip(a.err_voted, b.err_voted):
+        assert abs(xa - xb) <= tol, (a.err_voted, b.err_voted)
+
+
+def test_key_schedule_matches_host_split_loop():
+    keys = key_schedule(7, 5)
+    k = jax.random.key(7)
+    for c in range(5):
+        k, sub = jax.random.split(k)
+        assert jnp.all(jax.random.key_data(keys[c]) == jax.random.key_data(sub))
+
+
+def test_sharded_matches_reference_clean_scenario():
+    X, y, Xt, yt = toy()
+    kw = dict(cycles=30, eval_every=10, seed=1)
+    ref = run_simulation(small_cfg(), X, y, Xt, yt, **kw)
+    sh = run_simulation(small_cfg(), X, y, Xt, yt, engine="sharded", **kw)
+    assert_curves_close(ref, sh)
+    assert (ref.sent_total, ref.delivered_total, ref.lost_total,
+            ref.overflow_total) == (sh.sent_total, sh.delivered_total,
+                                    sh.lost_total, sh.overflow_total)
+
+
+def test_sharded_matches_reference_failure_scenario():
+    """Drop 0.5 + 10Δ delay + churn — the paper's extreme setting."""
+    X, y, Xt, yt = toy()
+    cfg = small_cfg(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9)
+    kw = dict(cycles=40, eval_every=20, seed=3)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert_curves_close(ref, sh)
+    assert ref.lost_total == sh.lost_total > 0  # churn actually loses messages
+
+
+@pytest.mark.parametrize("variant", ["mu", "um", "rw"])
+def test_sharded_pallas_kernel_matches_reference(variant):
+    """The fused gossip_cycle kernel path (interpret mode on CPU)."""
+    X, y, Xt, yt = toy(n=64)
+    cfg = small_cfg(n_nodes=64, variant=variant, drop_prob=0.2,
+                    delay_max_cycles=3)
+    kw = dict(cycles=20, eval_every=10, seed=5)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                        use_pallas=True, interpret=True, **kw)
+    assert_curves_close(ref, sh)
+
+
+@pytest.mark.parametrize("sampler", ["uniform", "matching"])
+@pytest.mark.parametrize("n", [32, 33])
+def test_sharded_engine_odd_and_even_populations(sampler, n):
+    """Both engines handle odd N — incl. the matching sampler's idle node."""
+    X, y, Xt, yt = toy(n=n)
+    kw = dict(cycles=16, eval_every=8, seed=2, sampler=sampler)
+    ref = run_simulation(small_cfg(n_nodes=n), X, y, Xt, yt, **kw)
+    sh = run_simulation(small_cfg(n_nodes=n), X, y, Xt, yt,
+                        engine="sharded", **kw)
+    assert_curves_close(ref, sh)
+    if sampler == "matching" and n % 2 == 1:
+        # one node idles per cycle: at most (n-1) sends per cycle
+        assert ref.sent_total <= (n - 1) * 16
+
+
+def test_sharded_engine_multirecord_nodes():
+    """(N, k, d) multi-record nodes stream through the scan path too."""
+    rng = np.random.default_rng(0)
+    X, y = make_linear_dataset(rng, 64 * 3 + 32, 8, noise=0.05)
+    Xtr = X[:192].reshape(64, 3, 8)
+    ytr = y[:192].reshape(64, 3)
+    Xt, yt = X[192:], y[192:]
+    cfg = small_cfg(n_nodes=64, dim=8)
+    kw = dict(cycles=12, eval_every=6, seed=4)
+    ref = run_simulation(cfg, Xtr, ytr, Xt, yt, **kw)
+    sh = run_simulation(cfg, Xtr, ytr, Xt, yt, engine="sharded", **kw)
+    assert_curves_close(ref, sh)
+
+
+def test_sharded_engine_rejects_unknown_engine():
+    X, y, Xt, yt = toy(n=16)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_simulation(small_cfg(n_nodes=16), X, y, Xt, yt, cycles=2,
+                       engine="bogus")
+
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.configs.gossip_linear import GossipLinearConfig
+    from repro.core.simulation import run_simulation
+    from repro.data.synthetic import make_linear_dataset
+
+    assert len(jax.devices()) == 4
+    rng = np.random.default_rng(0)
+    X, y = make_linear_dataset(rng, 128 + 64, 16, noise=0.05, separation=3.0)
+    Xtr, ytr, Xt, yt = X[:128], y[:128], X[128:], y[128:]
+    cfg = GossipLinearConfig(name="toy", dim=16, n_nodes=128, n_test=64,
+                             class_ratio=(1, 1), lam=1e-3, variant="mu",
+                             drop_prob=0.3, delay_max_cycles=4)
+    kw = dict(cycles=20, eval_every=10, seed=6)
+    ref = run_simulation(cfg, Xtr, ytr, Xt, yt, **kw)
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("nodes",))
+    sh = run_simulation(cfg, Xtr, ytr, Xt, yt, engine="sharded",
+                        mesh=mesh, **kw)
+    for a, b in zip(ref.err_fresh, sh.err_fresh):
+        assert abs(a - b) <= 0.02, (ref.err_fresh, sh.err_fresh)
+    assert ref.sent_total == sh.sent_total
+    print("MESH_PARITY_OK")
+""")
+
+
+def test_sharded_engine_multidevice_mesh_parity():
+    """shard_map node-axis path on a 4-device (forced host) mesh.
+
+    Runs in a subprocess because device count must be fixed before JAX
+    initializes (tests/conftest.py pins the main process to one device)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "MESH_PARITY_OK" in out.stdout

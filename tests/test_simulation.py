@@ -42,6 +42,29 @@ def test_perfect_matching_is_involution():
     assert np.all(dst != np.arange(40))
 
 
+@pytest.mark.parametrize("n", [3, 7, 33])
+def test_perfect_matching_odd_population(n):
+    """Odd N: no perfect matching exists; exactly one node self-maps (idles)."""
+    for seed in range(4):
+        dst = np.asarray(perfect_matching(jax.random.key(seed), n))
+        assert np.all(dst[dst] == np.arange(n))       # still an involution
+        assert int((dst == np.arange(n)).sum()) == 1  # exactly one idle node
+
+
+@pytest.mark.parametrize("n", [32, 33])
+def test_run_simulation_matching_sampler_both_parities(n, toy_data):
+    """Regression: sampler="matching" used to crash for odd N."""
+    X, y, Xt, yt = toy_data
+    res = run_simulation(small_cfg(n_nodes=n), X[:n], y[:n], Xt, yt,
+                         cycles=10, eval_every=10, seed=0,
+                         sampler="matching")
+    assert len(res.err_fresh) == 1
+    if n % 2 == 0:
+        assert res.sent_total == n * 10        # every node sends every cycle
+    else:
+        assert res.sent_total == (n - 1) * 10  # the unpaired node idles
+
+
 def test_hypercube_partner_mixes():
     n = 16
     seen = set()
@@ -68,6 +91,44 @@ def test_cache_ring_buffer():
     w, t = cache_mod.freshest(c)
     assert float(w[0, 0]) == 5.0
     assert int(c.count[0]) == 3  # capped at cache size
+
+
+def test_cache_wraparound_uses_only_recent_models():
+    """Past the wrap point, freshest/voted_predict see the C most recent
+    models only — stale pre-wrap entries must not influence the vote."""
+    C, d = 3, 1
+    c = cache_mod.init_cache(1, C, d)
+    # 2C+1 adds: first four vote +1, last three vote -1. If any stale model
+    # survived the wrap, the -1 majority below would flip.
+    signs = [1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0]
+    for i, s in enumerate(signs):
+        c = cache_mod.cache_add(c, jnp.array([True]),
+                                jnp.full((1, d), s),
+                                jnp.full((1,), i + 1, jnp.int32))
+    w, t = cache_mod.freshest(c)
+    assert float(w[0, 0]) == -1.0 and int(t[0]) == len(signs)
+    assert int(c.count[0]) == C          # count clamps at C past the wrap
+    X = jnp.ones((1, d))
+    voted = cache_mod.voted_predict(c, X)
+    assert float(voted[0, 0]) == -1.0    # majority over the last C == -1
+    # ring contents are exactly the last C models, in some rotation
+    assert sorted(np.asarray(c.t[0]).tolist()) == [5, 6, 7]
+
+
+def test_voted_predict_count_clamp_partial_cache():
+    """count < C: the vote divides by count and ignores unwritten slots."""
+    C, d = 4, 1
+    c = cache_mod.init_cache(1, C, d)     # slot 0: the zero init model
+    c = cache_mod.cache_add(c, jnp.array([True]), jnp.full((1, d), -1.0),
+                            jnp.ones((1,), jnp.int32))
+    assert int(c.count[0]) == 2
+    X = jnp.ones((1, d))
+    # votes: zero model scores 0 -> +1; -1 model -> -1. p_ratio = 1/2 -> +1
+    # (sign convention: ties go positive); unwritten slots would make it 3/4.
+    assert float(cache_mod.voted_predict(c, X)[0, 0]) == 1.0
+    c = cache_mod.cache_add(c, jnp.array([True]), jnp.full((1, d), -2.0),
+                            jnp.full((1,), 2, jnp.int32))
+    assert float(cache_mod.voted_predict(c, X)[0, 0]) == -1.0  # 1/3 < 1/2
 
 
 def test_mu_converges_and_beats_rw(toy_data):
@@ -126,3 +187,32 @@ def test_message_accounting():
         delivered += int(stats["delivered"]) + int(stats["overflow"])
     # all sent messages from cycles 0..8 must be delivered by cycle 9
     assert delivered >= sent - n  # last cycle's sends still in flight
+
+
+def test_message_economy_with_churn_balances_exactly():
+    """Every sent message is exactly one of delivered / lost (destination
+    offline at arrival) / overflow (beyond K rounds) / still in flight —
+    the per-cycle economy adds up with no silent discards."""
+    from repro.core.simulation import simulate_cycle
+    n, d, D, cycles = 64, 8, 5, 30
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n) + 0.1), jnp.float32)
+    online_mat = churn_trace(rng, n, cycles, 0.7)
+    st = init_state(n, d, 4, D)
+    key = jax.random.key(2)
+    sent = delivered = lost = overflow = 0
+    for c in range(cycles):
+        key, sub = jax.random.split(key)
+        st, stats = simulate_cycle(st, X, y, jnp.asarray(online_mat[c]), sub,
+                                   variant="mu", learner="pegasos", lam=1e-2,
+                                   eta=0.1, drop=0.3, delay_max=D,
+                                   k_rounds=2, sampler="uniform")
+        sent += int(stats["sent"])
+        delivered += int(stats["delivered"])
+        lost += int(stats["lost"])
+        overflow += int(stats["overflow"])
+        in_flight = int((np.asarray(st.buf_arrival) > c).sum())
+        assert sent == delivered + lost + overflow + in_flight
+    assert lost > 0          # churn at 70% online actually loses messages
+    assert delivered > 0

@@ -20,6 +20,7 @@ from repro.config.base import MoEConfig
 from repro.models.moe import moe_ffn, moe_spec
 from repro.models import layers as L
 from repro.sharding.act import activation_sharding
+from repro.utils.tree import tree_leaves_with_path
 
 
 def main() -> None:
@@ -40,8 +41,8 @@ def main() -> None:
 
     np.testing.assert_allclose(np.asarray(og), np.asarray(orr),
                                rtol=2e-5, atol=2e-5)
-    for (path, a), (_, b) in zip(jax.tree.leaves_with_path(gg),
-                                 jax.tree.leaves_with_path(gr)):
+    for (path, a), (_, b) in zip(tree_leaves_with_path(gg),
+                                 tree_leaves_with_path(gr)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-4, err_msg=str(path))
     print("OK: combine='reduce' == combine='gather' (forward + grad) "
