@@ -1,11 +1,13 @@
-"""Shared benchmark utilities: CSV output + dataset cache."""
+"""Shared benchmark utilities: CSV/JSON output + dataset cache."""
 from __future__ import annotations
 
 import functools
+import json
 import time
 from pathlib import Path
 
-OUT_DIR = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_DIR = REPO_ROOT / "results" / "benchmarks"
 
 
 def write_csv(name: str, header: str, rows) -> Path:
@@ -15,6 +17,15 @@ def write_csv(name: str, header: str, rows) -> Path:
         f.write(header + "\n")
         for r in rows:
             f.write(",".join(str(x) for x in r) + "\n")
+    return fp
+
+
+def write_bench_json(name: str, payload: dict) -> Path:
+    """Machine-readable perf trajectory: BENCH_<name>.json at the repo root
+    (the CSVs under results/ are per-run; the JSON is the one CI and future
+    sessions diff for regressions)."""
+    fp = REPO_ROOT / f"BENCH_{name}.json"
+    fp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return fp
 
 

@@ -2,24 +2,32 @@
 
 The paper's PeerSim runs stop near N ~ 10^4; related work ("On the Limit
 Performance of Floating Gossip") analyzes exactly the N→∞ regime. This bench
-measures node-cycles/sec for both engines over the sweep — the reference
-engine is measured only up to ``REF_MAX_N`` (its per-cycle host loop makes
-larger N pointless), the sharded engine goes to a million nodes.
+measures node-cycles/sec over the sweep on the paper's FULL extreme scenario
+— 50% message drop, delays uniform in [Δ, 10Δ] AND 90%-online churn (the
+vectorized v2 trace makes churned 10^6 populations cheap to set up) — for:
+
+* ``reference``       the per-cycle driver (measured up to ``REF_MAX_N``);
+* ``sharded-dense``   PR 1's dense K-round apply (``compact_rounds=False``);
+* ``sharded``         compacted multi-receive rounds (the default path);
+* ``sharded-bf16``    compacted + bf16 wire dtype (halved payload buffer).
 
     PYTHONPATH=src python -m benchmarks.population_scaling [--quick]
     PYTHONPATH=src python -m benchmarks.run --only population_scaling
 
-Output columns: engine, n_nodes, cycles, seconds, node_cycles_per_sec,
-final err_fresh (sanity: learning actually happens at every scale).
+Output: CSV rows (results/benchmarks/) plus the machine-readable perf
+trajectory ``BENCH_population_scaling.json`` at the repo root — per-N
+node-cycles/sec, in-flight payload buffer bytes, wire bytes, and the
+N=10^6 churn-trace generation time.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, write_csv
+from benchmarks.common import Timer, write_bench_json, write_csv
 
 REF_MAX_N = 100_000            # reference engine measured up to here
 SPEEDUP_AT_N = 100_000         # the acceptance-criterion comparison point
+CHURN_TRACE_N = 1_000_000      # churn-trace generation is timed at this N
 
 
 def _dataset(n: int, d: int, seed: int = 0):
@@ -29,65 +37,118 @@ def _dataset(n: int, d: int, seed: int = 0):
     return X[:n], y[:n], X[n:], y[n:]
 
 
-def _cfg(n: int, d: int):
+def _cfg(n: int, d: int, wire_dtype=None):
     from repro.configs.gossip_linear import GossipLinearConfig
-    # The paper's extreme failure scenario (Fig. 1 lower row): 50% message
-    # drop and delays uniform in [Δ, 10Δ] — also the regime where the
-    # reference engine's dense (delay_max, N) slot handling is most honest
-    # to measure. cache_size 4 keeps the (N, C, d) cache at 160 MB for
-    # N=10^6; online_fraction 1.0 keeps host churn-trace generation O(1)
-    # so the timing isolates the engines.
+    # The paper's full extreme failure scenario (Fig. 1 lower row): 50%
+    # message drop, delays uniform in [Δ, 10Δ], and churn with 90% of nodes
+    # online at any time. cache_size 4 keeps the (N, C, d) cache at 160 MB
+    # for N=10^6.
     return GossipLinearConfig(name=f"scale-{n}", dim=d, n_nodes=n,
                               n_test=512, class_ratio=(1, 1), lam=1e-3,
                               variant="mu", cache_size=4,
-                              drop_prob=0.5, delay_max_cycles=10)
+                              drop_prob=0.5, delay_max_cycles=10,
+                              online_fraction=0.9, wire_dtype=wire_dtype)
+
+
+# label -> (cfg wire_dtype, run_simulation engine kwargs)
+VARIANTS = [
+    ("reference", None, dict(engine="reference")),
+    ("sharded-dense", None, dict(engine="sharded", compact_rounds=False)),
+    ("sharded", None, dict(engine="sharded", compact_rounds=True)),
+    ("sharded-bf16", "bf16", dict(engine="sharded", compact_rounds=True)),
+]
 
 
 def run(quick: bool = False) -> dict:
-    from repro.core.simulation import run_simulation
+    from repro.core.simulation import (CHURN_TRACE_VERSION, churn_trace,
+                                       run_simulation)
 
     d = 10                                      # malicious-urls-sized features
     cycles = 20 if quick else 50
     # k_rounds=8 bounds per-cycle receive truncation to ~zero (overflow≈0),
     # matching the paper's event simulator, which never drops simultaneous
-    # arrivals; both engines run the identical protocol parameters.
+    # arrivals; all engines run the identical protocol parameters.
     k_rounds = 8
     sweep = [1_000, 10_000, 100_000] if quick else [
         1_000, 10_000, 100_000, 1_000_000]
     ref_max = 10_000 if quick else REF_MAX_N
 
     rows = []
+    json_rows = []
     rates: dict = {}
+    results: dict = {}
     for n in sweep:
         X, y, Xt, yt = _dataset(n, d)
-        cfg = _cfg(n, d)
-        for engine in ("reference", "sharded"):
-            if engine == "reference" and n > ref_max:
+        for label, wire, kw in VARIANTS:
+            if label == "reference" and n > ref_max:
                 continue
+            cfg = _cfg(n, d, wire_dtype=wire)
             # warm-up run compiles (same chunk length as the timed run);
             # the timed run measures steady state. eval_every=10 gives
             # paper-style curves and lets the sharded engine pipeline host
             # routing against the in-flight device scan.
             run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
-                           eval_every=10, seed=0, engine=engine,
-                           k_rounds=k_rounds)
+                           eval_every=10, seed=0, k_rounds=k_rounds, **kw)
             with Timer() as t:
                 res = run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
                                      eval_every=10, seed=0,
-                                     engine=engine, k_rounds=k_rounds)
+                                     k_rounds=k_rounds, **kw)
             rate = n * cycles / t.s
-            rates[(engine, n)] = rate
-            rows.append((engine, n, cycles, f"{t.s:.3f}", f"{rate:.0f}",
-                         f"{res.err_fresh[-1]:.4f}"))
+            rates[(label, n)] = rate
+            results[(label, n)] = res
+            rows.append((label, n, cycles, f"{t.s:.3f}", f"{rate:.0f}",
+                         f"{res.err_fresh[-1]:.4f}", wire or "f32",
+                         res.buf_payload_bytes, res.wire_bytes_total))
+            json_rows.append(dict(
+                engine=label, n_nodes=n, cycles=cycles, seconds=t.s,
+                node_cycles_per_sec=rate, err_fresh=res.err_fresh[-1],
+                wire_dtype=wire or "f32",
+                buf_payload_bytes=res.buf_payload_bytes,
+                wire_bytes_total=res.wire_bytes_total,
+                sent_total=res.sent_total,
+                delivered_total=res.delivered_total))
             print("population_scaling," + ",".join(str(x) for x in rows[-1]))
 
+    # churn-trace generation cost at mega-population scale (acceptance:
+    # the v2 vectorized sampler stays well under ~2 s at N=10^6)
+    with Timer() as t_trace:
+        churn_trace(np.random.default_rng(0), CHURN_TRACE_N, cycles, 0.9)
+    print(f"population_scaling,churn_trace,v{CHURN_TRACE_VERSION},"
+          f"n={CHURN_TRACE_N},cycles={cycles},{t_trace.s:.3f}s")
+
+    derived: dict = {}
     cmp_n = min(SPEEDUP_AT_N, ref_max)
     if ("reference", cmp_n) in rates and ("sharded", cmp_n) in rates:
         speedup = rates[("sharded", cmp_n)] / rates[("reference", cmp_n)]
+        derived[f"sharded_vs_reference_speedup_at_{cmp_n}"] = speedup
         print(f"population_scaling,speedup@N={cmp_n},{speedup:.1f}x")
+    top_n = sweep[-1]
+    if ("sharded-dense", top_n) in rates:
+        compact_speedup = rates[("sharded", top_n)] / rates[("sharded-dense", top_n)]
+        derived[f"compact_vs_dense_speedup_at_{top_n}"] = compact_speedup
+        print(f"population_scaling,compact_speedup@N={top_n},"
+              f"{compact_speedup:.2f}x")
+    if ("sharded-bf16", top_n) in results:
+        ratio = (results[("sharded-bf16", top_n)].buf_payload_bytes
+                 / results[("sharded", top_n)].buf_payload_bytes)
+        derived[f"bf16_payload_buffer_ratio_at_{top_n}"] = ratio
+        print(f"population_scaling,bf16_buffer_ratio@N={top_n},{ratio:.2f}")
+
     write_csv("population_scaling",
-              "engine,n_nodes,cycles,seconds,node_cycles_per_sec,err_fresh",
+              "engine,n_nodes,cycles,seconds,node_cycles_per_sec,err_fresh,"
+              "wire_dtype,buf_payload_bytes,wire_bytes_total",
               rows)
+    write_bench_json("population_scaling", dict(
+        bench="population_scaling",
+        quick=quick,
+        scenario=dict(drop_prob=0.5, delay_max_cycles=10,
+                      online_fraction=0.9, k_rounds=k_rounds, dim=d,
+                      cycles=cycles, variant="mu", cache_size=4),
+        rows=json_rows,
+        churn_trace=dict(version=CHURN_TRACE_VERSION, n_nodes=CHURN_TRACE_N,
+                         cycles=cycles, seconds=t_trace.s),
+        derived=derived,
+    ))
     return rates
 
 

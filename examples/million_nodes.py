@@ -30,7 +30,11 @@ def main() -> None:
     ap.add_argument("--dim", type=int, default=10)
     ap.add_argument("--extreme", action="store_true",
                     help="paper's extreme failure scenario "
-                         "(drop=0.5, delay up to 10 cycles)")
+                         "(drop=0.5, delay up to 10 cycles, 90%% online)")
+    ap.add_argument("--wire-dtype", choices=["bf16", "f16"], default=None,
+                    help="quantize payloads on the wire (and the in-flight "
+                         "buffer — the engine's dominant memory) to this "
+                         "dtype; merge math stays f32")
     args = ap.parse_args()
 
     from repro.configs.gossip_linear import GossipLinearConfig
@@ -44,10 +48,13 @@ def main() -> None:
         name=f"million-{n}", dim=d, n_nodes=n, n_test=1000,
         class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
         drop_prob=0.5 if args.extreme else 0.0,
-        delay_max_cycles=10 if args.extreme else 1)
+        delay_max_cycles=10 if args.extreme else 1,
+        online_fraction=0.9 if args.extreme else 1.0,
+        wire_dtype=args.wire_dtype)
 
     print(f"N={n:,} peers (one record each), d={d}, "
           f"{args.cycles} cycles, variant=MU, "
+          f"wire={args.wire_dtype or 'f32'}, "
           f"{'extreme failures' if args.extreme else 'no failures'}")
     t0 = time.time()
     res = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:],
@@ -61,6 +68,8 @@ def main() -> None:
     print(f"\n{n * args.cycles / dt:,.0f} node-cycles/sec "
           f"({dt:.1f}s wall; {res.sent_total:,} messages sent, "
           f"{res.delivered_total:,} delivered, {res.lost_total:,} lost)")
+    print(f"bandwidth: {res.wire_bytes_total / 1e9:.3f} GB on the wire, "
+          f"in-flight payload buffer {res.buf_payload_bytes / 1e6:.1f} MB")
 
 
 if __name__ == "__main__":

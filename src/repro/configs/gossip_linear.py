@@ -6,7 +6,7 @@ gossip protocol simulator and the on-mesh gossip runtime. Registered here so
 ``--arch gossip-linear-<dataset>`` selects the paper's exact experimental
 setups (Table I)."""
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -25,6 +25,10 @@ class GossipLinearConfig:
     drop_prob: float = 0.0        # extreme scenario: 0.5
     delay_max_cycles: int = 1     # extreme scenario: 10  (U[Δ, 10Δ])
     online_fraction: float = 1.0  # churn: 0.9 online at any time
+    # wire quantization (beyond-paper): "bf16"/"f16" store the transmitted
+    # model — and the simulator's in-flight payload buffer — in the reduced
+    # dtype; merge arithmetic stays f32 (gossip_optimizer.resolve_wire_dtype)
+    wire_dtype: Optional[str] = None
     citation: str = "[DOI:10.1002/cpe.2858]"
 
 

@@ -46,6 +46,35 @@ class GossipState(NamedTuple):
     step: jnp.ndarray       # () int32
 
 
+# ---------------------------------------------------------------------------
+# wire dtypes — shared by the on-mesh optimizer (``exchange_dtype``) and the
+# protocol simulator (``GossipLinearConfig.wire_dtype``): the transmitted
+# model is quantized on the wire, the merge arithmetic stays f32.
+# ---------------------------------------------------------------------------
+
+WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32}
+
+
+def resolve_wire_dtype(name):
+    """Wire-dtype name -> jnp dtype, or None for full precision.
+
+    ``None``/``""``/``"f32"`` mean no quantization (f32 is the native payload
+    dtype, so requesting it is a no-op)."""
+    if not name or name == "f32":
+        return None
+    try:
+        return WIRE_DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown wire dtype {name!r} "
+                         f"(expected one of {sorted(WIRE_DTYPES)})") from None
+
+
+def wire_itemsize(name) -> int:
+    """Bytes per transmitted model coefficient for a wire-dtype name."""
+    dt = resolve_wire_dtype(name)
+    return 4 if dt is None else jnp.dtype(dt).itemsize
+
+
 def stack_for_peers(params, n_peers: int):
     """Replicate params onto the peer axis: (…)-tree -> (peers, …)-tree."""
     return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_peers,) + p.shape),
@@ -148,7 +177,7 @@ def make_gossip_train_step(loss_fn: Callable, opt: Optimizer, n_peers: int,
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     vmap_kw = {"spmd_axis_name": spmd_axis} if spmd_axis else {}
-    xdt = {"bf16": jnp.bfloat16, "f16": jnp.float16}.get(cfg.exchange_dtype)
+    xdt = resolve_wire_dtype(cfg.exchange_dtype)
     merge_kw = dict(mesh=mesh, exchange_dtype=xdt,
                     peer_axes=peer_axes or
                     ((spmd_axis,) if spmd_axis and mesh is not None else ()))

@@ -30,6 +30,19 @@ network:
   Pallas ``kernels/gossip_cycle.py`` kernel: deliver→merge→update→
   cache-write in one VMEM-resident pass per node block (interpret mode on
   CPU for the parity tests).
+* **compacted multi-receive rounds** — the first winner round touches most
+  nodes and stays dense, but rounds ≥ 2 touch only the multi-receivers
+  (~a quarter of the population in the extreme scenario, and winner rounds
+  nest: round-k receivers ⊆ round-(k-1) receivers). The router emits capped
+  compacted index lists and the data plane gathers / applies the remaining
+  chain / scatters back just those nodes, so K-round apply cost tracks the
+  delivered-message count instead of K·N (dense fallback per chunk when the
+  multi round is near-full).
+* **wire-dtype payloads** — ``cfg.wire_dtype="bf16"/"f16"`` stores the
+  in-flight ``buf_w`` (the engine's dominant memory: ``(D, N, d)``) in the
+  wire dtype; messages are quantized at send time and all merge math runs
+  in f32, the exact contract of ``gossip_merge``'s ``exchange_dtype``.
+  ``SimResult`` reports ``wire_bytes_total``/``buf_payload_bytes``.
 
 Determinism contract: for a given seed the engine consumes the *same* host
 RNG stream (churn trace, eval subset) and the *same* per-cycle threefry
@@ -52,9 +65,11 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
+from repro.core.gossip_optimizer import resolve_wire_dtype, wire_itemsize
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
-from repro.core.simulation import (SimResult, _eval, eval_points, sim_setup)
+from repro.core.simulation import (SimResult, _eval, eval_points,
+                                   message_wire_bytes, sim_setup)
 from repro.sharding.compat import shard_map_compat
 
 
@@ -132,12 +147,18 @@ class _HostRouter:
         (ascending index order => last write wins => max slot id), which
         run at memcpy-like speed instead of XLA:CPU's serial scatters.
 
-        Returns (src_slot (T, K, n) int32 with -1 marking "no receive this
-        round", stats dict). The data plane derives the valid mask from the
-        sign, so only one integer table crosses to the device."""
+        Returns ``(src_slot, stats, multi)``: ``src_slot`` (T, K, n) int32
+        with -1 marking "no receive this round" (the data plane derives the
+        valid mask from the sign, so only one integer table crosses to the
+        device), and ``multi`` — one int32 array per cycle listing the nodes
+        that receive in round 2 or later (ascending). Winner rounds fill in
+        order, so round-k receivers are a subset of round-(k-1) receivers:
+        ``multi[t]`` indexes *every* receive beyond round 1, which is what
+        the compacted data-plane path gathers/scatters."""
         T, n = dsts.shape
         D, K = self.delay_max, k_rounds
         src_slot = np.full((T, K, n), -1, np.int32)
+        multi = [_EMPTY_I32] * T
         sent = delivered = lost = overflow = 0
         flat_dst = self.dst.reshape(-1)
 
@@ -162,6 +183,9 @@ class _HostRouter:
                     rem = rem[keep]
                     rem_dst = rem_dst[keep]
                 overflow += int(rem.size)
+                if K > 1:
+                    multi[t] = np.flatnonzero(
+                        src_slot[t, 1] >= 0).astype(np.int32)
             # sends happen after deliveries: overwrite this cycle's slot row
             row = clock % D
             self.dst[row] = dsts[t]
@@ -185,7 +209,35 @@ class _HostRouter:
 
         stats = dict(sent=sent, delivered=delivered, lost=lost,
                      overflow=overflow)
-        return src_slot, stats
+        return src_slot, stats, multi
+
+
+_EMPTY_I32 = np.empty(0, np.int32)
+
+
+def pack_compact_rounds(src_slot: np.ndarray, multi, width: int):
+    """Compact the dense (T, K, n) routing table for rounds >= 2.
+
+    Rounds beyond the first touch only the ``multi`` nodes (about a quarter
+    of the population in the paper's extreme scenario) — the dense table
+    makes the data plane compute them over all N anyway. This packs them
+    into fixed-width tables the scan can gather/scatter:
+
+    * ``src0``  (T, n)        round-1 slots (dense — most nodes receive);
+    * ``ridx``  (T, M)        receiver node ids, -1 padded;
+    * ``rslot`` (T, K-1, M)   per-round slots for those nodes, -1 = none.
+
+    ``width`` caps M; the caller buckets it (powers of two) so the jitted
+    chunk fn recompiles O(log n) times, and falls back to the dense table
+    when a round is near-full (see ``run_sharded_simulation``)."""
+    T, K, n = src_slot.shape
+    ridx = np.full((T, width), -1, np.int32)
+    rslot = np.full((T, K - 1, width), -1, np.int32)
+    for t, r in enumerate(multi):
+        ridx[t, :r.size] = r
+        if r.size:
+            rslot[t, :, :r.size] = src_slot[t, 1:, r].T
+    return src_slot[:, 0], ridx, rslot
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +255,12 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
     (``lastModel <- m`` stores the *received* model, so the chain is known
     upfront) — and the K ring-buffer writes collapse into one one-hot
     combine instead of K scatter row-writes. Tracks the freshest model in
-    the carry so the send step needs no cache gather."""
+    the carry so the send step needs no cache gather.
+
+    Payloads arrive in the wire dtype (bf16/f16 when ``cfg.wire_dtype`` is
+    set); all merge/update arithmetic runs in f32 — the same contract as
+    ``gossip_merge``'s ``exchange_dtype``. A no-op for f32 payloads."""
+    msg_w = msg_w.astype(jnp.float32)
     K, n, d = msg_w.shape
     C = cache.w.shape[1]
     rows = jnp.arange(n)
@@ -295,30 +352,41 @@ def _shard_apply(base_apply, mesh, axis: str):
 @functools.lru_cache(maxsize=64)
 def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     delay_max: int, use_pallas: bool, interpret: bool,
-                    mesh, axis: Optional[str]):
+                    mesh, axis: Optional[str], compact: bool):
     """Jitted data-plane chunk runner, cached per configuration.
 
     Caching the jitted callable (rather than rebuilding the closure per
     ``run_sharded_simulation`` call) lets XLA's compile cache hit across
     runs — a benchmark sweep compiles each (chunk-length, N) combination
-    once, not once per call."""
+    once, not once per call.
+
+    ``compact`` selects the compacted multi-receive path: round 1 is applied
+    densely (most receiving nodes receive exactly once), rounds >= 2 run
+    only on the gathered multi-receiver subset and scatter back — the
+    K-round apply cost tracks the delivered-message count instead of K·N.
+    Requires the plain ``_vector_apply`` (no mesh sharding, no Pallas)."""
     update = make_update(learner, lam=lam, eta=eta)
     apply_fn = _pallas_apply(lam, interpret) if use_pallas else _vector_apply
     if mesh is not None and axis is not None:
         apply_fn = _shard_apply(apply_fn, mesh, axis)
+    if compact and (use_pallas or mesh is not None):
+        raise ValueError("compacted rounds require the plain vector apply")
     D = delay_max
 
-    def chunk_fn(carry, src_slots, X, y, X_test, y_test, eval_idx):
-        def body(carry, src_slot):
+    def chunk_fn(carry, tables, X, y, X_test, y_test, eval_idx):
+        def records(clock):
+            if X.ndim == 3:                   # multi-record nodes
+                rec = clock % X.shape[1]
+                return X[:, rec, :], y[:, rec]
+            return X, y
+
+        def dense_body(carry, src_slot):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
              buf_w, buf_t, clock) = carry
-            valid = src_slot >= 0                 # (K, n); -1 = no receive
+            valid = src_slot >= 0             # (K, n); -1 = no receive
             idx = jnp.maximum(src_slot, 0)
             n, d = last_w.shape
-            Xc, yc = X, y
-            if X.ndim == 3:                       # multi-record nodes
-                rec = clock % X.shape[1]
-                Xc, yc = X[:, rec, :], y[:, rec]
+            Xc, yc = records(clock)
             flat_w = buf_w.reshape(-1, d)
             flat_t = buf_t.reshape(-1)
             msg_w = flat_w[idx]
@@ -327,12 +395,56 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                 last_w, last_t, fresh_w, fresh_t,
                 ModelCache(cw, ct, ptr, cnt), msg_w, msg_t, valid, Xc, yc,
                 variant=variant, update=update)
-            buf_w = buf_w.at[clock % D].set(fresh_w)
+            buf_w = buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype))
             buf_t = buf_t.at[clock % D].set(fresh_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, clock + 1), None
 
-        carry, _ = lax.scan(body, carry, src_slots)
+        def compact_body(carry, inp):
+            (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
+             buf_w, buf_t, clock) = carry
+            src0, ridx, rslot = inp
+            n, d = last_w.shape
+            Xc, yc = records(clock)
+            flat_w = buf_w.reshape(-1, d)
+            flat_t = buf_t.reshape(-1)
+            # round 1, dense over all nodes (same math as a K=1 dense apply)
+            i0 = jnp.maximum(src0, 0)
+            last_w, last_t, fresh_w, fresh_t, cache = apply_fn(
+                last_w, last_t, fresh_w, fresh_t,
+                ModelCache(cw, ct, ptr, cnt), flat_w[i0][None],
+                flat_t[i0][None], (src0 >= 0)[None], Xc, yc,
+                variant=variant, update=update)
+            # rounds >= 2: gather the multi-receiver subset, continue the
+            # chain (their lastModel already holds the round-1 message),
+            # scatter back — work tracks delivered messages, not K·N
+            pad = ridx < 0
+            gi = jnp.maximum(ridx, 0)
+            vc = (rslot >= 0) & (~pad)[None, :]
+            sc = jnp.maximum(rslot, 0)
+            sub = ModelCache(cache.w[gi], cache.t[gi], cache.ptr[gi],
+                             cache.count[gi])
+            lw2, lt2, fw2, ft2, sub2 = apply_fn(
+                last_w[gi], last_t[gi], fresh_w[gi], fresh_t[gi], sub,
+                flat_w[sc], flat_t[sc], vc, Xc[gi], yc[gi],
+                variant=variant, update=update)
+            si = jnp.where(pad, n, gi)        # out of bounds => dropped
+            last_w = last_w.at[si].set(lw2, mode="drop")
+            last_t = last_t.at[si].set(lt2, mode="drop")
+            fresh_w = fresh_w.at[si].set(fw2, mode="drop")
+            fresh_t = fresh_t.at[si].set(ft2, mode="drop")
+            cache = ModelCache(cache.w.at[si].set(sub2.w, mode="drop"),
+                               cache.t.at[si].set(sub2.t, mode="drop"),
+                               cache.ptr.at[si].set(sub2.ptr, mode="drop"),
+                               cache.count.at[si].set(sub2.count, mode="drop"))
+            buf_w = buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype))
+            buf_t = buf_t.at[clock % D].set(fresh_t)
+            return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
+                    cache.ptr, cache.count, buf_w, buf_t, clock + 1), None
+
+        body = compact_body if compact else dense_body
+        xs = tables if compact else tables[0]
+        carry, _ = lax.scan(body, carry, xs)
         cache = ModelCache(carry[4], carry[5], carry[6], carry[7])
         errs = _eval(cache, eval_idx, X_test, y_test)
         return carry, errs
@@ -351,16 +463,27 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                            sampler: str = "uniform", k_rounds: int = 4,
                            mesh=None, node_axis: Optional[str] = None,
                            use_pallas: Optional[bool] = None,
-                           interpret: Optional[bool] = None) -> SimResult:
+                           interpret: Optional[bool] = None,
+                           compact_rounds: Optional[bool] = None) -> SimResult:
     """Run the protocol with the sharded mega-population engine.
 
     ``mesh``: optional ``jax.sharding.Mesh``; the node axis is split over
     ``node_axis`` (default: the mesh's first axis) — N must be divisible by
     that axis size. ``use_pallas`` selects the fused cycle kernel (default:
     only on TPU; requires the Pegasos learner); ``interpret`` forces Pallas
-    interpret mode (default: on for non-TPU backends, for CPU testing)."""
+    interpret mode (default: on for non-TPU backends, for CPU testing).
+    ``compact_rounds`` selects the compacted multi-receive path (rounds >= 2
+    gather/apply/scatter only the receiving nodes); default: on whenever the
+    plain vector apply runs (no mesh, no Pallas) and k_rounds > 1. A chunk
+    whose multi-receiver round is near-full (> N/2) falls back to the dense
+    table. ``cfg.wire_dtype`` ("bf16"/"f16") stores the in-flight payload
+    buffer — the engine's dominant memory — in the wire dtype; merge math
+    stays f32 and the identical quantization is applied by the reference
+    engine, so cross-engine parity holds under quantization too."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
+    wdt = resolve_wire_dtype(cfg.wire_dtype)
+    buf_dtype = wdt or jnp.float32
     online_mat, eval_idx, X, y, X_test, y_test = sim_setup(
         cfg, X, y, X_test, y_test, cycles=cycles, seed=seed,
         eval_nodes=eval_nodes)
@@ -386,14 +509,19 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         else:
             mesh = axis = None
 
-    chunk_jit = _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
-                                D, use_pallas, interpret, mesh, axis)
+    if compact_rounds is None:
+        compact_rounds = (mesh is None and not use_pallas)
+    compact_rounds = compact_rounds and k_rounds > 1  # K=1 has no rounds >= 2
+
+    def get_chunk_fn(compact: bool):
+        return _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
+                               D, use_pallas, interpret, mesh, axis, compact)
 
     # data-plane carry: models + cache + payload lanes of the buffer
     carry = (jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              *cache_mod.init_cache(n, cfg.cache_size, d),
-             jnp.zeros((D, n, d), jnp.float32), jnp.zeros((D, n), jnp.int32),
+             jnp.zeros((D, n, d), buf_dtype), jnp.zeros((D, n), jnp.int32),
              jnp.zeros((), jnp.int32))
     if node_sharding is not None:
         put_n = lambda a: jax.device_put(a, node_sharding)
@@ -403,6 +531,7 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         X, y = put_n(X), put_n(y)
 
     res = SimResult([], [], [], [], 0, cfg)
+    res.buf_payload_bytes = D * n * d * wire_itemsize(cfg.wire_dtype)
     pts = eval_points(cycles, eval_every)
     if not pts:                       # cycles == 0: nothing to simulate
         return res
@@ -420,22 +549,41 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     # With all integer draws staged upfront (bounded: 8 bytes/node-cycle),
     # chunk i+1's host routing overlaps chunk i's device scan — the scan is
     # dispatched asynchronously and only the eval results are fetched, once,
-    # after the last chunk.
+    # after the last chunk. Each staged entry is released right after it is
+    # routed, so host memory stays bounded by ~one chunk of draw tables.
     prefetch = cycles * n <= 250_000_000
     if prefetch:
         staged = [draw(lo, hi) for lo, hi in bounds]
 
+    # compacted-table width, sticky across chunks (monotone powers of two)
+    # so the jitted chunk fn compiles O(log n) times per run, not per chunk
+    compact_width = 8
+
     def route(i):
+        nonlocal compact_width
         lo, hi = bounds[i]
-        dn, an = staged[i] if prefetch else draw(lo, hi)
-        return router.route_chunk(dn, an, online_mat[lo:hi], lo, k_rounds)
+        if prefetch:
+            dn, an = staged[i]
+            staged[i] = None          # satellite fix: bound prefetch memory
+        else:
+            dn, an = draw(lo, hi)
+        src_slot, stats, multi = router.route_chunk(
+            dn, an, online_mat[lo:hi], lo, k_rounds)
+        m_raw = max((r.size for r in multi), default=0)
+        if compact_rounds and m_raw <= n // 2:
+            while compact_width < m_raw:
+                compact_width *= 2
+            return True, pack_compact_rounds(src_slot, multi,
+                                             compact_width), stats
+        return False, (src_slot,), stats
 
     errs_pending = []
     pending = route(0)
     for i, p in enumerate(pts):
-        src_slot, stats = pending
-        carry, errs = chunk_jit(carry, jnp.asarray(src_slot), X, y,
-                                X_test, y_test, eval_idx)
+        is_compact, tables, stats = pending
+        carry, errs = get_chunk_fn(is_compact)(
+            carry, tuple(jnp.asarray(a) for a in tables), X, y,
+            X_test, y_test, eval_idx)
         if i + 1 < len(pts):
             pending = route(i + 1)    # overlaps the in-flight device scan
         res.sent_total += stats["sent"]
@@ -448,4 +596,5 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         res.err_fresh.append(float(err_f))
         res.err_voted.append(float(err_v))
         res.similarity.append(float(sim))
+    res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     return res

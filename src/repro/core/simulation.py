@@ -34,6 +34,7 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
+from repro.core.gossip_optimizer import resolve_wire_dtype, wire_itemsize
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
 from repro.utils.metrics import cosine_similarity
@@ -50,12 +51,15 @@ class SimState(NamedTuple):
     clock: jnp.ndarray      # () int32
 
 
-def init_state(n: int, d: int, cache_size: int, delay_max: int) -> SimState:
+def init_state(n: int, d: int, cache_size: int, delay_max: int,
+               wire_dtype=None) -> SimState:
+    """``wire_dtype`` (jnp dtype or None): storage dtype of the in-flight
+    payload buffer — the bytes a real deployment would put on the wire."""
     return SimState(
         last_w=jnp.zeros((n, d), jnp.float32),
         last_t=jnp.zeros((n,), jnp.int32),
         cache=cache_mod.init_cache(n, cache_size, d),
-        buf_w=jnp.zeros((delay_max, n, d), jnp.float32),
+        buf_w=jnp.zeros((delay_max, n, d), wire_dtype or jnp.float32),
         buf_t=jnp.zeros((delay_max, n), jnp.int32),
         buf_dst=jnp.zeros((delay_max, n), jnp.int32),
         buf_arrival=jnp.full((delay_max, n), -1, jnp.int32),
@@ -143,7 +147,9 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
         state.buf_dst, state.buf_arrival, online, state.clock, k_rounds)
     flat_w = state.buf_w.reshape(-1, d)
     flat_t = state.buf_t.reshape(-1)
-    msg_w = flat_w[src_slot]                    # (K, N, d) winning payloads
+    # payloads were quantized to the wire dtype at send time; the merge
+    # arithmetic runs in f32 (same contract as gossip_merge exchange_dtype)
+    msg_w = flat_w[src_slot].astype(jnp.float32)  # (K, N, d) winning payloads
     msg_t = flat_t[src_slot]
     last_w, last_t, cache = apply_receives(
         state.last_w, state.last_t, state.cache, msg_w, msg_t, valid, X, y,
@@ -164,7 +170,7 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     arrival = jnp.where(send_ok, state.clock + delay, -1)
 
     slot = state.clock % D
-    buf_w = state.buf_w.at[slot].set(fresh_w)
+    buf_w = state.buf_w.at[slot].set(fresh_w.astype(state.buf_w.dtype))
     buf_t = state.buf_t.at[slot].set(fresh_t)
     buf_dst = state.buf_dst.at[slot].set(dst)
     buf_arrival = state.buf_arrival.at[slot].set(arrival)
@@ -198,6 +204,9 @@ def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
 # ---------------------------------------------------------------------------
 
 
+CHURN_TRACE_VERSION = 2
+
+
 def churn_trace(rng: np.random.Generator, n: int, cycles: int,
                 online_fraction: float, mean_online: float = 50.0,
                 sigma: float = 1.5) -> np.ndarray:
@@ -205,22 +214,76 @@ def churn_trace(rng: np.random.Generator, n: int, cycles: int,
 
     Lognormal online-session lengths (the Stutzbach-Rejaie churn model the
     paper uses); offline durations scaled so the stationary online fraction
-    matches ``online_fraction`` (the paper's 90%)."""
+    matches ``online_fraction`` (the paper's 90%).
+
+    Trace version 2 (``CHURN_TRACE_VERSION``): the per-node Python session
+    loop of v1 became a vectorized numpy sampler — sessions are batch-drawn
+    per node (redrawing only the not-yet-covered tail until every node's
+    alternating session chain covers the horizon), the session-end
+    boundaries are scattered into a per-(node, cycle) count matrix, and the
+    online matrix falls out as ``state0 ^ parity(cumsum(counts))`` — a node
+    is in session j at cycle c iff j boundaries are <= c, and its state
+    flips with the parity of j. The session model and stationary fraction
+    are unchanged, but the rng consumption *order* is not: for a given seed
+    a v2 trace differs bitwise from v1. Both engines draw one shared trace
+    per run (``sim_setup``), so cross-engine parity is unaffected;
+    generating a 10^6-node × 50-cycle trace drops from multi-second Python
+    looping to ~1 s."""
     if online_fraction >= 1.0:
         return np.ones((cycles, n), dtype=bool)
+    if cycles == 0:
+        return np.zeros((0, n), dtype=bool)
     mean_off = mean_online * (1.0 - online_fraction) / online_fraction
     mu_on = np.log(mean_online) - sigma ** 2 / 2
     mu_off = np.log(max(mean_off, 1e-9)) - sigma ** 2 / 2
-    out = np.zeros((cycles, n), dtype=bool)
-    for i in range(n):
-        t = -rng.integers(0, int(mean_online))     # random phase
-        state = rng.random() < online_fraction
-        while t < cycles:
-            dur = max(1, int(rng.lognormal(mu_on if state else mu_off, sigma)))
-            out[max(t, 0):min(t + dur, cycles), i] = state
-            t += dur
-            state = not state
-    return out
+    phase = rng.integers(0, max(int(mean_online), 1), size=n)
+    state0 = rng.random(n) < online_fraction
+
+    # the lognormal median (not the mean — sigma=1.5 is heavy-tailed) sets
+    # the typical sessions-per-horizon; the redraw loop covers the tail
+    med_pair = np.exp(mu_on) + np.exp(mu_off)
+    horizon = cycles + int(mean_online)
+    step = int(np.clip(np.ceil(horizon / max(med_pair, 1.0)) + 2, 4, 4096))
+
+    def draw_sessions(cols_done: int, m: int, init_state) -> np.ndarray:
+        # session j has state init ^ (j odd); durations = max(1, int(lognormal))
+        # — drawn in f32 (the truncation to whole cycles makes f64 moot)
+        j = cols_done + np.arange(m)
+        on = init_state[:, None] ^ (j[None, :] % 2 == 1)
+        mu = np.where(on, np.float32(mu_on), np.float32(mu_off))
+        z = rng.standard_normal((init_state.size, m), dtype=np.float32)
+        return np.maximum(np.exp(mu + np.float32(sigma) * z).astype(np.int32), 1)
+
+    # counts[c, i] = #session boundaries of node i at cycle c, cycle-major
+    # so the output needs no transpose; boundaries at or before cycle 0 flip
+    # ALL in-range cycles alike, so only their parity matters — it is folded
+    # into the cycle-0 state (``flip0``) instead of scattered. int16 is
+    # ample: a node has at most ``cols`` in-range boundaries
+    counts = np.zeros((cycles, n), np.int16)
+    flip0 = np.zeros(n, bool)
+
+    def scatter_boundaries(node_ids, bounds):
+        r, c = np.nonzero((bounds > 0) & (bounds < cycles))
+        np.add.at(counts, (bounds[r, c], node_ids[r]), 1)
+        flip0[node_ids] ^= ((bounds <= 0).sum(axis=1) & 1).astype(bool)
+
+    bounds = draw_sessions(0, step, state0).cumsum(axis=1) - phase[:, None]
+    scatter_boundaries(np.arange(n), bounds)
+    last = bounds[:, -1]
+    sub = np.flatnonzero(last < cycles)         # nodes not yet covered
+    lsub = last[sub]
+    cols = step
+    while sub.size:
+        bounds = (lsub[:, None]
+                  + draw_sessions(cols, step, state0[sub]).cumsum(axis=1))
+        scatter_boundaries(sub, bounds)
+        cols += step
+        lsub = bounds[:, -1]
+        keep = lsub < cycles
+        sub, lsub = sub[keep], lsub[keep]
+
+    parity = counts.cumsum(axis=0, dtype=np.int16) & 1  # (cycles, n)
+    return (state0 ^ flip0)[None, :] ^ parity.astype(bool)
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +302,17 @@ class SimResult:
     sent_total: int = 0
     delivered_total: int = 0
     lost_total: int = 0         # arrived while destination offline
+    # bandwidth economy (the paper's central cost axis): bytes actually put
+    # on the wire (sent messages × per-message payload), and the footprint
+    # of the dominant in-flight (D, N, d) payload buffer — both scale with
+    # the wire dtype (GossipLinearConfig.wire_dtype)
+    wire_bytes_total: int = 0
+    buf_payload_bytes: int = 0
+
+
+def message_wire_bytes(d: int, wire_dtype_name) -> int:
+    """Bytes per transmitted model: d coefficients + the int32 counter."""
+    return d * wire_itemsize(wire_dtype_name) + 4
 
 
 def sim_setup(cfg: GossipLinearConfig, X, y, X_test, y_test, *, cycles: int,
@@ -318,17 +392,20 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         cfg, X, y, X_test, y_test, cycles=cycles, seed=seed,
         eval_nodes=eval_nodes)
 
-    state = init_state(n, d, cfg.cache_size, max(cfg.delay_max_cycles, 1))
+    D = max(cfg.delay_max_cycles, 1)
+    wdt = resolve_wire_dtype(cfg.wire_dtype)
+    state = init_state(n, d, cfg.cache_size, D, wire_dtype=wdt)
     key = jax.random.key(seed)
 
     res = SimResult([], [], [], [], 0, cfg)
+    res.buf_payload_bytes = D * n * d * wire_itemsize(cfg.wire_dtype)
     for c in range(cycles):
         key, sub = jax.random.split(key)
         state, stats = simulate_cycle(
             state, X, y, jnp.asarray(online_mat[c]), sub,
             variant=cfg.variant, learner=cfg.learner, lam=cfg.lam,
             eta=cfg.eta, drop=cfg.drop_prob,
-            delay_max=max(cfg.delay_max_cycles, 1), k_rounds=k_rounds,
+            delay_max=D, k_rounds=k_rounds,
             sampler=sampler)
         res.overflow_total += int(stats["overflow"])
         res.sent_total += int(stats["sent"])
@@ -340,4 +417,5 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             res.err_fresh.append(float(err_f))
             res.err_voted.append(float(err_v))
             res.similarity.append(float(sim))
+    res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     return res

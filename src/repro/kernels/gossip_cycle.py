@@ -94,31 +94,37 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
 
     last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, d);
     msg_t, valid: (K, N) int32; returns the updated
-    (last_w, last_t, cache_w, cache_t, ptr, count)."""
+    (last_w, last_t, cache_w, cache_t, ptr, count).
+
+    ``msg_w`` may arrive in a reduced wire dtype (bf16/f16 — the simulator's
+    in-flight buffer under ``cfg.wire_dtype``); the kernel upcasts in VMEM,
+    so HBM message traffic is paid at wire precision. The node block widens
+    to the 16-sublane minimum tile for 2-byte operands."""
     n, d = last_w.shape
     _, c, _ = cache_w.shape
     k = msg_w.shape[0]
+    blk = BLK_N if jnp.dtype(msg_w.dtype).itemsize >= 4 else max(BLK_N, 16)
 
-    pad_nd = lambda a: _pad_to(_pad_to(a, LANE, 1), BLK_N, 0)
-    pad_n = lambda a: _pad_to(a, BLK_N, 0)
+    pad_nd = lambda a: _pad_to(_pad_to(a, LANE, 1), blk, 0)
+    pad_n = lambda a: _pad_to(a, blk, 0)
     lw, xp = pad_nd(last_w), pad_nd(x)
     lt, yp = pad_n(last_t), pad_n(y)
-    cwp = _pad_to(_pad_to(_pad_to(cache_w, LANE, 2), C_SUB, 1), BLK_N, 0)
-    ctp = _pad_to(_pad_to(cache_t, C_SUB, 1), BLK_N, 0)
+    cwp = _pad_to(_pad_to(_pad_to(cache_w, LANE, 2), C_SUB, 1), blk, 0)
+    ctp = _pad_to(_pad_to(cache_t, C_SUB, 1), blk, 0)
     ptrp, cntp = pad_n(ptr), pad_n(count)
-    mw = _pad_to(_pad_to(msg_w, LANE, 2), BLK_N, 1)
-    mt = _pad_to(msg_t, BLK_N, 1)
-    vl = _pad_to(valid, BLK_N, 1)
+    mw = _pad_to(_pad_to(msg_w, LANE, 2), blk, 1)
+    mt = _pad_to(msg_t, blk, 1)
+    vl = _pad_to(valid, blk, 1)
     np_, dp = lw.shape
     cp = cwp.shape[1]
-    grid = (np_ // BLK_N,)
+    grid = (np_ // blk,)
 
-    vec = pl.BlockSpec((BLK_N, dp), lambda i: (i, 0))
-    sca = pl.BlockSpec((BLK_N,), lambda i: (i,))
-    kvec = pl.BlockSpec((k, BLK_N, dp), lambda i: (0, i, 0))
-    ksca = pl.BlockSpec((k, BLK_N), lambda i: (0, i))
-    cvec = pl.BlockSpec((BLK_N, cp, dp), lambda i: (i, 0, 0))
-    csca = pl.BlockSpec((BLK_N, cp), lambda i: (i, 0))
+    vec = pl.BlockSpec((blk, dp), lambda i: (i, 0))
+    sca = pl.BlockSpec((blk,), lambda i: (i,))
+    kvec = pl.BlockSpec((k, blk, dp), lambda i: (0, i, 0))
+    ksca = pl.BlockSpec((k, blk), lambda i: (0, i))
+    cvec = pl.BlockSpec((blk, cp, dp), lambda i: (i, 0, 0))
+    csca = pl.BlockSpec((blk, cp), lambda i: (i, 0))
 
     outs = pl.pallas_call(
         functools.partial(_cycle_kernel, variant=variant, lam=lam,

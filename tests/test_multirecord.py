@@ -44,6 +44,33 @@ def test_single_record_reduces_to_2d_path():
     assert abs(r3.err_fresh[-1] - r2.err_fresh[-1]) < 1e-6
 
 
+def test_multirecord_sharded_engine_parity():
+    """(N, k, d) nodes on the sharded engine: the ``rec = clock % k``
+    round-robin must stay aligned with the reference engine across chunk
+    boundaries (clock lives in the scan carry), including under the extreme
+    failure scenario and wire quantization."""
+    import dataclasses
+    X, y, Xt, yt = _dataset(96, 3)
+    cfg = dataclasses.replace(_cfg("mu", 24), drop_prob=0.4,
+                              delay_max_cycles=5, online_fraction=0.9)
+    # eval_every=7 with k=3 records puts chunk boundaries at clocks that are
+    # not multiples of k — the rotation must resume mid-stride
+    kw = dict(cycles=21, eval_every=7, seed=9)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert ref.cycles == sh.cycles
+    for a, b in zip(ref.err_fresh, sh.err_fresh):
+        assert abs(a - b) <= 0.02, (ref.err_fresh, sh.err_fresh)
+    assert (ref.sent_total, ref.delivered_total, ref.lost_total) == \
+        (sh.sent_total, sh.delivered_total, sh.lost_total)
+
+    cfg_q = dataclasses.replace(cfg, wire_dtype="bf16")
+    ref_q = run_simulation(cfg_q, X, y, Xt, yt, **kw)
+    sh_q = run_simulation(cfg_q, X, y, Xt, yt, engine="sharded", **kw)
+    for a, b in zip(ref_q.err_fresh, sh_q.err_fresh):
+        assert abs(a - b) <= 0.02, (ref_q.err_fresh, sh_q.err_fresh)
+
+
 @pytest.mark.slow
 def test_gossip_advantage_shrinks_with_local_records():
     """Paper §II: with more local data the RW (local-learning-like) baseline

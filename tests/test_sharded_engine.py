@@ -15,8 +15,8 @@ import numpy as np
 import pytest
 
 from repro.configs.gossip_linear import GossipLinearConfig
-from repro.core.sharded_engine import key_schedule
-from repro.core.simulation import run_simulation
+from repro.core.sharded_engine import key_schedule, pack_compact_rounds
+from repro.core.simulation import message_wire_bytes, run_simulation
 from repro.data.synthetic import make_linear_dataset
 
 
@@ -71,12 +71,14 @@ def test_sharded_matches_reference_failure_scenario():
     assert ref.lost_total == sh.lost_total > 0  # churn actually loses messages
 
 
+@pytest.mark.parametrize("wire", [None, "bf16"])
 @pytest.mark.parametrize("variant", ["mu", "um", "rw"])
-def test_sharded_pallas_kernel_matches_reference(variant):
-    """The fused gossip_cycle kernel path (interpret mode on CPU)."""
+def test_sharded_pallas_kernel_matches_reference(variant, wire):
+    """The fused gossip_cycle kernel path (interpret mode on CPU), including
+    bf16 wire message operands (the widened 16-sublane node block)."""
     X, y, Xt, yt = toy(n=64)
     cfg = small_cfg(n_nodes=64, variant=variant, drop_prob=0.2,
-                    delay_max_cycles=3)
+                    delay_max_cycles=3, wire_dtype=wire)
     kw = dict(cycles=20, eval_every=10, seed=5)
     ref = run_simulation(cfg, X, y, Xt, yt, **kw)
     sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
@@ -111,6 +113,142 @@ def test_sharded_engine_multirecord_nodes():
     ref = run_simulation(cfg, Xtr, ytr, Xt, yt, **kw)
     sh = run_simulation(cfg, Xtr, ytr, Xt, yt, engine="sharded", **kw)
     assert_curves_close(ref, sh)
+
+
+def test_compact_and_dense_rounds_agree():
+    """compact_rounds gathers/applies/scatters only multi-receivers; the
+    curves and the message economy must equal the dense K-round apply."""
+    X, y, Xt, yt = toy()
+    cfg = small_cfg(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9)
+    kw = dict(cycles=40, eval_every=20, seed=3, engine="sharded")
+    dense = run_simulation(cfg, X, y, Xt, yt, compact_rounds=False, **kw)
+    comp = run_simulation(cfg, X, y, Xt, yt, compact_rounds=True, **kw)
+    assert dense.err_fresh == comp.err_fresh
+    assert dense.err_voted == comp.err_voted
+    assert (dense.sent_total, dense.delivered_total, dense.lost_total,
+            dense.overflow_total) == (comp.sent_total, comp.delivered_total,
+                                      comp.lost_total, comp.overflow_total)
+
+
+def test_pack_compact_rounds_covers_every_multi_receive():
+    """The compacted tables must encode exactly the dense table's rounds:
+    round 1 dense, every round >= 2 receive present at the receiver's
+    compact position, padding inert (-1)."""
+    rng = np.random.default_rng(0)
+    T, K, n = 3, 4, 32
+    src_slot = np.full((T, K, n), -1, np.int32)
+    for t in range(T):
+        recv = rng.choice(n, size=12, replace=False)
+        for j, node in enumerate(recv):
+            depth = 1 + (j % K)              # winner rounds fill in order
+            src_slot[t, :depth, node] = rng.integers(0, 64, size=depth)
+    multi = [np.flatnonzero(src_slot[t, 1] >= 0).astype(np.int32)
+             for t in range(T)]
+    width = max(r.size for r in multi) + 3   # over-wide: padding must be inert
+    src0, ridx, rslot = pack_compact_rounds(src_slot, multi, width)
+    assert np.array_equal(src0, src_slot[:, 0])
+    for t in range(T):
+        m = multi[t]
+        assert np.array_equal(ridx[t, :m.size], m)
+        assert np.all(ridx[t, m.size:] == -1)
+        assert np.all(rslot[t, :, m.size:] == -1)
+        for k in range(1, K):
+            assert np.array_equal(rslot[t, k - 1, :m.size], src_slot[t, k, m])
+
+
+def test_compact_dense_fallback_mid_run(monkeypatch):
+    """A chunk whose multi round is near-full (> N/2) must fall back to the
+    dense table without disturbing the compact chunks around it. Forced by
+    making the router report a full multi-receiver list for one chunk —
+    the src_slot table stays truthful, so the dense path must reproduce the
+    reference curves while the run mixes compact and dense chunk fns."""
+    from repro.core import sharded_engine as se
+
+    X, y, Xt, yt = toy()
+    cfg = small_cfg(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9)
+    kw = dict(cycles=30, eval_every=10, seed=3)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+
+    orig = se._HostRouter.route_chunk
+    calls = []
+
+    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds):
+        src_slot, stats, multi = orig(self, dsts, arrivals, online_rows,
+                                      clock0, k_rounds)
+        if len(calls) == 1:           # middle chunk: claim a near-full round
+            multi = [np.arange(self.n, dtype=np.int32)] * len(multi)
+        calls.append(max(r.size for r in multi))
+        return src_slot, stats, multi
+
+    monkeypatch.setattr(se._HostRouter, "route_chunk", fake)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                        compact_rounds=True, **kw)
+    assert len(calls) == 3 and calls[1] == 128  # fallback chunk was forced
+    assert_curves_close(ref, sh)
+    assert ref.sent_total == sh.sent_total
+
+
+def test_sharded_wire_bf16_matches_reference_wire_bf16():
+    """Both engines quantize at send time with the same semantics, so the
+    bf16-wire curves must agree across engines like the f32 curves do."""
+    X, y, Xt, yt = toy()
+    cfg = small_cfg(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9,
+                    wire_dtype="bf16")
+    kw = dict(cycles=40, eval_every=20, seed=3)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert_curves_close(ref, sh)
+    assert (ref.sent_total, ref.delivered_total) == (sh.sent_total,
+                                                     sh.delivered_total)
+
+
+def test_wire_bf16_curves_close_to_f32():
+    """Documented tolerance: bf16 wire quantization moves the error curves
+    by at most 0.05 at any eval point on the toy problem."""
+    X, y, Xt, yt = toy()
+    kw = dict(cycles=30, eval_every=10, seed=1, engine="sharded")
+    f32 = run_simulation(small_cfg(), X, y, Xt, yt, **kw)
+    bf16 = run_simulation(small_cfg(wire_dtype="bf16"), X, y, Xt, yt, **kw)
+    assert_curves_close(f32, bf16, tol=0.05)
+
+
+def test_wire_quantization_matches_gossip_merge_exchange():
+    """The simulator's wire semantics — quantize the transmitted model,
+    merge in f32 — must equal gossip_merge's exchange_dtype semantics."""
+    from repro.core.gossip_optimizer import gossip_merge
+    from repro.core.learners import LinearModel
+    from repro.core.merge import merge
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64)), jnp.float32)
+    out = gossip_merge({"w": w}, np.array([1, 0]),
+                       exchange_dtype=jnp.bfloat16)["w"]
+    # simulator: peer 1's model is quantized at send time, peer 0 merges it
+    # (in f32) with its own full-precision model
+    msg = w[1].astype(jnp.bfloat16).astype(jnp.float32)
+    t = jnp.zeros((), jnp.int32)
+    mine = merge(LinearModel(msg, t), LinearModel(w[0], t)).w
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(mine))
+
+
+@pytest.mark.parametrize("engine", ["reference", "sharded"])
+def test_wire_and_buffer_accounting(engine):
+    """wire_bytes_total and buf_payload_bytes follow the wire dtype exactly;
+    bf16 halves both the per-coefficient wire cost and the dominant
+    in-flight buffer."""
+    X, y, Xt, yt = toy(n=32)
+    kw = dict(cycles=10, eval_every=10, seed=0, engine=engine)
+    d, D = 16, 4
+    f32 = run_simulation(small_cfg(n_nodes=32, delay_max_cycles=D),
+                         X, y, Xt, yt, **kw)
+    bf16 = run_simulation(small_cfg(n_nodes=32, delay_max_cycles=D,
+                                    wire_dtype="bf16"), X, y, Xt, yt, **kw)
+    assert message_wire_bytes(d, None) == d * 4 + 4
+    assert message_wire_bytes(d, "bf16") == d * 2 + 4
+    assert f32.wire_bytes_total == f32.sent_total * (d * 4 + 4)
+    assert bf16.wire_bytes_total == bf16.sent_total * (d * 2 + 4)
+    assert f32.buf_payload_bytes == D * 32 * d * 4
+    assert bf16.buf_payload_bytes == D * 32 * d * 2
+    assert bf16.sent_total == f32.sent_total  # routing is payload-blind
 
 
 def test_sharded_engine_rejects_unknown_engine():

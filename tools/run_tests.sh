@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 test runner (referenced from ROADMAP.md).
 #
-#   tools/run_tests.sh          full tier-1 suite
-#   tools/run_tests.sh --fast   inner-loop subset (skips the slow model-zoo
-#                               and perf-profile suites)
+#   tools/run_tests.sh               full tier-1 suite
+#   tools/run_tests.sh --fast        inner-loop subset (skips the slow
+#                                    model-zoo and perf-profile suites)
+#   tools/run_tests.sh --bench-smoke fast subset, then the population-scaling
+#                                    benchmark in --quick mode — an engine
+#                                    perf regression fails loudly (and
+#                                    refreshes BENCH_population_scaling.json)
 #
 # Installs the optional test extras (hypothesis) when an installer and
 # network are available; the suite degrades gracefully without them
@@ -23,5 +27,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
     shift
     exec python -m pytest -x -q -k "not models and not perf" "$@"
+fi
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    shift
+    python -m pytest -x -q -k "not models and not perf" "$@"
+    exec python -m benchmarks.run --quick --only population_scaling
 fi
 exec python -m pytest -x -q "$@"
