@@ -9,7 +9,8 @@ import argparse
 import time
 
 SUITES = ["table1", "fig1", "fig2", "fig3", "theory", "kernels",
-          "gossip_vs_allreduce", "roofline", "population_scaling"]
+          "gossip_vs_allreduce", "roofline", "population_scaling",
+          "wire_quantization"]
 
 
 def main() -> None:
@@ -49,6 +50,9 @@ def main() -> None:
     if "population_scaling" in only:
         from benchmarks import population_scaling
         population_scaling.run(args.quick)
+    if "wire_quantization" in only:
+        from benchmarks import wire_quantization
+        wire_quantization.run(args.quick)
     print(f"benchmarks done in {time.time()-t0:.1f}s")
 
 

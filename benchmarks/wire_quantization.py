@@ -1,0 +1,142 @@
+"""Wire-quantization study: f32/bf16/f16/int8/int8_sr payloads at scale.
+
+The paper's central cost axis is communication: one model per message,
+random walks instead of raw-data movement. PR 2 halved the wire bytes with
+16-bit float payloads; this sweep measures the next 2x — per-message affine
+int8 (deterministic and stochastically rounded) — on the FULL extreme
+scenario (50% drop, delays U[Δ, 10Δ], 90%-online churn), recording what the
+4x coefficient compression actually costs in terminal error at population
+scale.
+
+Dimensions: the sweep runs at d=57 (the paper's spambase feature count), the
+regime the paper targets — big enough that the per-message f16
+scale/zero-point + int32 counter overhead amortizes (at d=57 an int8 message
+is 65 B vs 232 B for f32: 3.57x on the wire; asymptotically 4x), small
+enough that 10^6-node populations with 10Δ in-flight buffers still fit.
+
+Per (dtype, N): wire bytes/message, total wire bytes, in-flight
+payload-buffer bytes, node-cycles/s (sharded engine, compacted rounds), the
+terminal fresh-model error, and its delta vs the f32 baseline at the same N.
+A bitwise reference-vs-sharded parity probe for the int8 dtypes runs at the
+smallest N (the full matrix lives in tests/test_wire_quantization.py).
+
+    PYTHONPATH=src python -m benchmarks.wire_quantization [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only wire_quantization
+
+Output: CSV rows (results/benchmarks/) plus the machine-readable trajectory
+``BENCH_wire_quantization.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, write_bench_json, write_csv
+
+DIM = 57                       # spambase-sized models (paper Table I)
+WIRE_DTYPES = ["f32", "bf16", "f16", "int8", "int8_sr"]
+PARITY_PROBE_N = 1_000         # bitwise ref-vs-sharded check at this N
+
+
+def _dataset(n: int, d: int, seed: int = 0):
+    from repro.data.synthetic import make_linear_dataset
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 512, d, noise=0.07, separation=2.5)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def _cfg(n: int, d: int, wire_dtype):
+    from repro.configs.gossip_linear import GossipLinearConfig
+    # full extreme failure scenario; cache_size 4 bounds the (N, C, d)
+    # cache (912 MB f32 at N=10^6, d=57)
+    return GossipLinearConfig(
+        name=f"wireq-{n}", dim=d, n_nodes=n, n_test=512, class_ratio=(1, 1),
+        lam=1e-3, variant="mu", cache_size=4, drop_prob=0.5,
+        delay_max_cycles=10, online_fraction=0.9,
+        wire_dtype=None if wire_dtype == "f32" else wire_dtype)
+
+
+def run(quick: bool = False) -> dict:
+    from repro.core.simulation import message_wire_bytes, run_simulation
+
+    d = DIM
+    cycles = 20 if quick else 50
+    k_rounds = 8                            # overflow ~ 0, like the paper
+    sweep = [1_000, 10_000, 100_000] if quick else [
+        1_000, 10_000, 100_000, 1_000_000]
+
+    rows, json_rows = [], []
+    results: dict = {}
+    for n in sweep:
+        X, y, Xt, yt = _dataset(n, d)
+        for wire in WIRE_DTYPES:
+            cfg = _cfg(n, d, wire)
+            kw = dict(eval_every=10, seed=0, k_rounds=k_rounds,
+                      engine="sharded")
+            # warm-up compiles the same chunk fn (chunk length eval_every)
+            run_simulation(cfg, X, y, Xt, yt, cycles=10, **kw)
+            with Timer() as t:
+                res = run_simulation(cfg, X, y, Xt, yt, cycles=cycles, **kw)
+            rate = n * cycles / t.s
+            results[(wire, n)] = res
+            err = res.err_fresh[-1]
+            base = results.get(("f32", n))
+            delta = err - base.err_fresh[-1] if base else 0.0
+            rows.append((wire, n, cycles, f"{t.s:.3f}", f"{rate:.0f}",
+                         message_wire_bytes(d, cfg.wire_dtype),
+                         res.wire_bytes_total, res.buf_payload_bytes,
+                         f"{err:.4f}", f"{delta:+.4f}"))
+            json_rows.append(dict(
+                wire_dtype=wire, n_nodes=n, cycles=cycles, seconds=t.s,
+                node_cycles_per_sec=rate,
+                wire_bytes_per_msg=message_wire_bytes(d, cfg.wire_dtype),
+                wire_bytes_total=res.wire_bytes_total,
+                buf_payload_bytes=res.buf_payload_bytes,
+                sent_total=res.sent_total, err_fresh=err,
+                err_delta_vs_f32=delta))
+            print("wire_quantization," + ",".join(str(x) for x in rows[-1]))
+
+    # bitwise cross-engine parity probe for the quantized dtypes
+    parity = {}
+    Xp, yp, Xtp, ytp = _dataset(PARITY_PROBE_N, d)
+    for wire in ("int8", "int8_sr"):
+        cfg = _cfg(PARITY_PROBE_N, d, wire)
+        kw = dict(cycles=20, eval_every=10, seed=3, k_rounds=k_rounds)
+        ref = run_simulation(cfg, Xp, yp, Xtp, ytp, **kw)
+        sh = run_simulation(cfg, Xp, yp, Xtp, ytp, engine="sharded", **kw)
+        parity[wire] = bool(ref.err_fresh == sh.err_fresh
+                            and ref.err_voted == sh.err_voted)
+        print(f"wire_quantization,parity,{wire},{parity[wire]}")
+
+    derived: dict = {}
+    top_n = sweep[-1]
+    for wire in WIRE_DTYPES[1:]:
+        if (wire, top_n) in results and ("f32", top_n) in results:
+            ratio = (results[("f32", top_n)].wire_bytes_total
+                     / results[(wire, top_n)].wire_bytes_total)
+            derived[f"{wire}_wire_reduction_at_{top_n}"] = ratio
+            print(f"wire_quantization,reduction@N={top_n},{wire},"
+                  f"{ratio:.2f}x")
+
+    write_csv("wire_quantization",
+              "wire_dtype,n_nodes,cycles,seconds,node_cycles_per_sec,"
+              "wire_bytes_per_msg,wire_bytes_total,buf_payload_bytes,"
+              "err_fresh,err_delta_vs_f32", rows)
+    write_bench_json("wire_quantization", dict(
+        bench="wire_quantization",
+        quick=quick,
+        scenario=dict(drop_prob=0.5, delay_max_cycles=10,
+                      online_fraction=0.9, k_rounds=k_rounds, dim=d,
+                      cycles=cycles, variant="mu", cache_size=4,
+                      engine="sharded"),
+        rows=json_rows,
+        parity_bitwise=parity,
+        derived=derived,
+    ))
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(ap.parse_args().quick)

@@ -31,7 +31,8 @@ def main() -> None:
     ap.add_argument("--extreme", action="store_true",
                     help="paper's extreme failure scenario "
                          "(drop=0.5, delay up to 10 cycles, 90%% online)")
-    ap.add_argument("--wire-dtype", choices=["bf16", "f16"], default=None,
+    ap.add_argument("--wire-dtype",
+                    choices=["bf16", "f16", "int8", "int8_sr"], default=None,
                     help="quantize payloads on the wire (and the in-flight "
                          "buffer — the engine's dominant memory) to this "
                          "dtype; merge math stays f32")

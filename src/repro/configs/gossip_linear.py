@@ -11,23 +11,69 @@ from typing import Optional, Tuple
 
 @dataclass(frozen=True)
 class GossipLinearConfig:
+    """One gossip-learning experimental setup (the paper's Table I rows).
+
+    Consumed by ``repro.core.simulation.run_simulation`` (both the reference
+    and the sharded engine) and by the dataset generators in
+    ``repro.data.synthetic``. All protocol knobs live here; execution knobs
+    (engine, mesh, Pallas, k_rounds, sampler) are ``run_simulation``
+    arguments because they must not change the simulated protocol.
+
+    Field guide — problem shape:
+
+    * ``name``: dataset/config identifier (``--arch gossip-linear-<name>``).
+    * ``dim``: feature dimension d — also the transmitted model size.
+    * ``n_nodes``: network size N; the paper's fully distributed setting has
+      one training record per node, so N = training-set size.
+    * ``n_test``: held-out test records used for the error curves.
+    * ``class_ratio``: (negative, positive) class counts of the dataset.
+
+    Learning rule (Algorithm 2/3):
+
+    * ``learner``: "pegasos" | "adaline" | "logistic" — the online update.
+    * ``lam``: Pegasos regularization λ (its step size is 1/(λt)).
+    * ``eta``: Adaline/logistic learning rate (unused by Pegasos).
+    * ``cache_size``: per-node bounded model cache backing VOTEDPREDICT
+      (Algorithm 4) — the paper's Fig. 3 voting curves use 10.
+    * ``variant``: CREATEMODEL variant — "rw" (random walk, no merge),
+      "mu" (merge-then-update, the paper's favored P2Pegasos), "um"
+      (update-both-then-merge).
+
+    Failure model (paper Section VI-A): the *extreme* scenario is
+    ``drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9``.
+
+    * ``drop_prob``: i.i.d. message-drop probability.
+    * ``delay_max_cycles``: message delay drawn uniform in [Δ, max·Δ],
+      quantized to whole cycles; 1 = next-cycle delivery.
+    * ``online_fraction``: stationary fraction of nodes online under the
+      lognormal churn trace (1.0 disables churn).
+
+    Wire quantization (beyond-paper, ``repro.core.gossip_optimizer``):
+
+    * ``wire_dtype``: dtype of the *transmitted* model — and of the
+      simulator's in-flight payload buffer, the dominant memory at
+      ``(delay_max, N, d)``. ``None``/"f32" = full precision; "bf16"/"f16"
+      = half-precision cast; "int8"/"int8_sr" = per-message affine int8
+      (an f16 scale/zero-point pair rides with each message, +4 wire
+      bytes). "int8_sr" rounds stochastically (unbiased) using a
+      reproducible per-cycle threefry key. Merge arithmetic is always f32
+      — only the wire representation changes. Measured trade-offs:
+      ``BENCH_wire_quantization.json`` and docs/ENGINES.md.
+
+    * ``citation``: provenance of the experimental setup."""
     name: str
-    dim: int                      # feature dimension d
-    n_nodes: int                  # network size N (= training set size)
+    dim: int
+    n_nodes: int
     n_test: int
     class_ratio: Tuple[int, int]
-    learner: str = "pegasos"      # pegasos | adaline | logistic
-    lam: float = 1e-4             # Pegasos λ
-    eta: float = 0.01             # Adaline learning rate
-    cache_size: int = 10          # model cache for local voting (Alg. 4)
-    variant: str = "mu"           # rw | mu | um (Alg. 2)
-    # failure model (paper Section VI-A.i)
-    drop_prob: float = 0.0        # extreme scenario: 0.5
-    delay_max_cycles: int = 1     # extreme scenario: 10  (U[Δ, 10Δ])
-    online_fraction: float = 1.0  # churn: 0.9 online at any time
-    # wire quantization (beyond-paper): "bf16"/"f16" store the transmitted
-    # model — and the simulator's in-flight payload buffer — in the reduced
-    # dtype; merge arithmetic stays f32 (gossip_optimizer.resolve_wire_dtype)
+    learner: str = "pegasos"
+    lam: float = 1e-4
+    eta: float = 0.01
+    cache_size: int = 10
+    variant: str = "mu"
+    drop_prob: float = 0.0
+    delay_max_cycles: int = 1
+    online_fraction: float = 1.0
     wire_dtype: Optional[str] = None
     citation: str = "[DOI:10.1002/cpe.2858]"
 

@@ -50,16 +50,36 @@ class GossipState(NamedTuple):
 # wire dtypes — shared by the on-mesh optimizer (``exchange_dtype``) and the
 # protocol simulator (``GossipLinearConfig.wire_dtype``): the transmitted
 # model is quantized on the wire, the merge arithmetic stays f32.
+#
+# Two families:
+#
+# * float wire dtypes ("bf16"/"f16") — a plain dtype cast at send time;
+# * sub-byte wire dtypes ("int8"/"int8_sr") — per-message affine int8
+#   quantization: each transmitted model carries an f16 (scale, zero_point)
+#   pair computed from that message's coefficient range, and the receiver
+#   dequantizes before the f32 merge. "int8_sr" replaces round-to-nearest
+#   with stochastic rounding (unbiased: E[q] = w), driven by a counter-based
+#   threefry key so runs stay reproducible.
 # ---------------------------------------------------------------------------
 
-WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32}
+WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32,
+               "int8": jnp.int8, "int8_sr": jnp.int8}
+
+# wire-dtype names that use per-message affine int8 quantization
+INT8_WIRE_DTYPES = frozenset({"int8", "int8_sr"})
+
+# int8 payloads target [-126, 126]: one code of headroom keeps the clip at
+# ±127 inert even after the scale is rounded to its f16 wire representation
+INT8_QMAX = 126
 
 
 def resolve_wire_dtype(name):
     """Wire-dtype name -> jnp dtype, or None for full precision.
 
     ``None``/``""``/``"f32"`` mean no quantization (f32 is the native payload
-    dtype, so requesting it is a no-op)."""
+    dtype, so requesting it is a no-op). ``"int8"`` and ``"int8_sr"`` both
+    resolve to ``jnp.int8`` — the payload storage dtype; the rounding mode is
+    carried by the *name* (see :func:`quantize_wire`)."""
     if not name or name == "f32":
         return None
     try:
@@ -69,10 +89,86 @@ def resolve_wire_dtype(name):
                          f"(expected one of {sorted(WIRE_DTYPES)})") from None
 
 
+def is_quantized_wire(name) -> bool:
+    """True for the affine-int8 wire dtypes (payload needs scale/zero-point)."""
+    return name in INT8_WIRE_DTYPES
+
+
+def is_stochastic_wire(name) -> bool:
+    """True when the wire dtype rounds stochastically (needs a PRNG key)."""
+    return name == "int8_sr"
+
+
 def wire_itemsize(name) -> int:
     """Bytes per transmitted model coefficient for a wire-dtype name."""
     dt = resolve_wire_dtype(name)
     return 4 if dt is None else jnp.dtype(dt).itemsize
+
+
+def wire_overhead_bytes(name) -> int:
+    """Per-message metadata bytes beyond the coefficients: the affine int8
+    dtypes ship an f16 scale + f16 zero-point with every message."""
+    return 4 if is_quantized_wire(name) else 0
+
+
+def quantize_wire(w, name, key=None):
+    """Per-message affine int8 quantization of a batch of models.
+
+    ``w``: (..., d) f32 — each slice along the last axis is one transmitted
+    model (one message). Returns ``(q, scale, zp)`` with ``q`` int8 of
+    ``w.shape`` and ``scale``/``zp`` f16 of ``w.shape[:-1]`` — the f16
+    values are exactly what rides the wire, and the SAME rounded values are
+    used by the quantizer itself, so the round-trip error is bounded by one
+    quantization step of the *transmitted* scale:
+
+      |w - dequantize(q, scale, zp)| <= scale      (per coordinate)
+
+    (<= scale/2 for round-to-nearest; stochastic rounding is unbiased but
+    may land a full step away). ``zp`` is the f16-rounded range midpoint and
+    ``scale`` covers the residual range ``max(hi-zp, zp-lo)`` over
+    ``INT8_QMAX`` codes, so codes stay within ±127 even after f16 rounding —
+    the defensive clip never distorts.
+
+    ``name``: "int8" rounds to nearest (deterministic); "int8_sr" adds
+    uniform [0, 1) noise before the floor — ``key`` (threefry) is required
+    and makes the draw reproducible: both simulator engines feed the same
+    per-cycle ``k_recv`` key here, keeping cross-engine parity bitwise.
+
+    Precondition: coefficients are expected inside the f16-representable
+    range (|w| ≲ 6.5e4 — far beyond any non-divergent linear model here;
+    Pegasos is bounded by 1/sqrt(lam)). Outside it the f16 scale/zero-point
+    SATURATE at the f16 max instead of overflowing to inf, so a divergent
+    run stays finite on the wire (grossly quantized) rather than flooding
+    every merge with NaNs."""
+    f16_max = float(jnp.finfo(jnp.float16).max)
+    sat = lambda v: jnp.clip(v, -f16_max, f16_max).astype(jnp.float16)
+    w = w.astype(jnp.float32)
+    lo = jnp.min(w, axis=-1)
+    hi = jnp.max(w, axis=-1)
+    zp = sat((hi + lo) * 0.5)
+    zpf = zp.astype(jnp.float32)
+    scale = sat(jnp.maximum(hi - zpf, zpf - lo) / INT8_QMAX)
+    # guarded divisor: a constant message (hi == lo, scale 0) maps every
+    # coordinate to code 0 and dequantizes to exactly zp
+    sf = jnp.where(scale > 0, scale, jnp.float16(1)).astype(jnp.float32)
+    u = (w - zpf[..., None]) / sf[..., None]
+    if name == "int8_sr":
+        if key is None:
+            raise ValueError("int8_sr quantization needs a PRNG key")
+        u = jnp.floor(u + jax.random.uniform(key, w.shape))
+    else:
+        u = jnp.round(u)
+    q = jnp.clip(u, -127, 127).astype(jnp.int8)
+    return q, scale, zp
+
+
+def dequantize_wire(q, scale, zp):
+    """Inverse of :func:`quantize_wire`: ``q * scale + zp`` in f32.
+
+    The Pallas ``gossip_cycle`` kernel applies this same expression in-VMEM
+    (same op order), so kernel and jnp paths agree bitwise."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            + zp.astype(jnp.float32)[..., None])
 
 
 def stack_for_peers(params, n_peers: int):
@@ -106,14 +202,36 @@ def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
 
     ``exchange_dtype`` (beyond-paper): wire dtype for the exchanged model
     (e.g. bf16) — the partner's contribution is quantized on the wire but
-    the average is taken in f32, halving the sync wire bytes."""
+    the average is taken in f32, halving the sync wire bytes. ``jnp.int8``
+    (``resolve_wire_dtype("int8")``/``("int8_sr")``) selects per-row affine
+    int8 quantization — each leaf row is quantized over its last axis with
+    :func:`quantize_wire` and dequantized before the f32 average, the exact
+    semantics of the protocol simulator's int8 wire path (pinned in
+    tests/test_wire_quantization.py). The optimizer path always rounds to
+    nearest: stochastic rounding needs a per-step key, which the simulator's
+    per-cycle ``k_recv`` stream provides but the train step does not thread."""
     perm = np.asarray(perm)
     pairs = [(s, int(perm[s])) for s in range(len(perm))]
+    int8_exchange = (exchange_dtype is not None
+                     and jnp.dtype(exchange_dtype) == jnp.int8)
+
+    def int8_wire(v):
+        """Affine round-trip with per-peer-row grouping: a leaf must never
+        share one scale across peers, so rank-<2 leaves (per-peer scalars
+        here; per-device scalars in the mesh body) gain a trailing axis of
+        one before the per-last-axis quantization."""
+        x = v[..., None] if v.ndim < 2 else v
+        return dequantize_wire(*quantize_wire(x, "int8")).reshape(v.shape)
+
+    def on_wire(partner):
+        if exchange_dtype is None:
+            return partner
+        if int8_exchange:
+            return int8_wire(partner)
+        return partner.astype(exchange_dtype)
 
     def avg_take(p):
-        partner = p[perm]
-        if exchange_dtype is not None:
-            partner = partner.astype(exchange_dtype)
+        partner = on_wire(p[perm])
         return ((p.astype(jnp.float32) + partner.astype(jnp.float32)) / 2.0).astype(p.dtype)
 
     if mesh is None or not peer_axes:
@@ -131,6 +249,19 @@ def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
         def avg(x):
             if exchange_dtype is None or x.dtype == exchange_dtype:
                 xin = jax.lax.ppermute(x, axis, pairs)
+            elif int8_exchange:
+                # quantize locally, permute the int8 codes plus their f16
+                # scale/zero-point, dequantize on arrival: d + 4 wire bytes
+                # per row instead of 4d. Integer codes are opaque to the
+                # algebraic simplifier, so no bitcast trick is needed.
+                # Rank-<2 blocks take the same trailing-axis path as
+                # ``int8_wire`` so mesh and non-mesh grouping agree.
+                xg = x[..., None] if x.ndim < 2 else x
+                q, sc, zp = quantize_wire(xg, "int8")
+                xin = dequantize_wire(jax.lax.ppermute(q, axis, pairs),
+                                      jax.lax.ppermute(sc, axis, pairs),
+                                      jax.lax.ppermute(zp, axis, pairs)
+                                      ).reshape(x.shape)
             else:
                 # permute a bitcast integer view of the quantized value:
                 # a plain convert around the ppermute gets commuted back to

@@ -38,10 +38,14 @@ network:
   chain / scatters back just those nodes, so K-round apply cost tracks the
   delivered-message count instead of K·N (dense fallback per chunk when the
   multi round is near-full).
-* **wire-dtype payloads** — ``cfg.wire_dtype="bf16"/"f16"`` stores the
-  in-flight ``buf_w`` (the engine's dominant memory: ``(D, N, d)``) in the
-  wire dtype; messages are quantized at send time and all merge math runs
-  in f32, the exact contract of ``gossip_merge``'s ``exchange_dtype``.
+* **wire-dtype payloads** — ``cfg.wire_dtype="bf16"/"f16"/"int8"/
+  "int8_sr"`` stores the in-flight ``buf_w`` (the engine's dominant memory:
+  ``(D, N, d)``) in the wire dtype; messages are quantized at send time and
+  all merge math runs in f32, the exact contract of ``gossip_merge``'s
+  ``exchange_dtype``. The affine int8 dtypes carry per-message f16
+  scale/zero-point lanes (``buf_scale``/``buf_zp``) and dequantize at
+  delivery — in-kernel for the Pallas path; "int8_sr" rounds stochastically
+  with the same per-cycle ``k_recv`` threefry slot as the reference engine.
   ``SimResult`` reports ``wire_bytes_total``/``buf_payload_bytes``.
 
 Determinism contract: for a given seed the engine consumes the *same* host
@@ -65,11 +69,14 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
-from repro.core.gossip_optimizer import resolve_wire_dtype, wire_itemsize
+from repro.core.gossip_optimizer import (dequantize_wire, is_quantized_wire,
+                                         is_stochastic_wire, quantize_wire,
+                                         resolve_wire_dtype)
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
 from repro.core.simulation import (SimResult, _eval, eval_points,
-                                   message_wire_bytes, sim_setup)
+                                   message_wire_bytes, payload_buffer_bytes,
+                                   sim_setup)
 from repro.sharding.compat import shard_map_compat
 
 
@@ -124,6 +131,14 @@ def _draw_chunk(keys, onlines, clock0, *, n: int, drop: float,
 class _HostRouter:
     """Host-side control-plane state: which flat buffer slot holds a message
     for which destination, bucketed by arrival cycle.
+
+    The router is the "control plane" half of the engine split (diagrammed
+    in docs/ARCHITECTURE.md): routing is *payload-independent* — it depends
+    only on the PRNG draws, the churn matrix and the delay/drop outcomes —
+    so it runs on the host in numpy while the device scans the previous
+    chunk's payload math. Payload-blindness is also why every wire dtype
+    (f32 through int8_sr) sees the identical delivery schedule, which the
+    accounting tests pin via ``sent_total`` equality across dtypes.
 
     ``pending[a]`` collects the flat slot ids (row*n + sender) of messages
     arriving at cycle ``a``; ``dst[row]`` mirrors the destination lane of
@@ -305,15 +320,22 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
 
 
 def _pallas_apply(lam: float, interpret: bool):
-    """Receive application backed by the fused Pallas gossip-cycle kernel."""
+    """Receive application backed by the fused Pallas gossip-cycle kernel.
+
+    Affine-int8 wire payloads pass straight through: ``msg_w`` stays int8
+    and the per-message f16 ``msg_scale``/``msg_zp`` ride along — the kernel
+    dequantizes in VMEM, so HBM message traffic is paid at one byte per
+    coefficient."""
     from repro.kernels.gossip_cycle import fused_receive_apply
 
     def apply_fn(last_w, last_t, fresh_w, fresh_t, cache, msg_w, msg_t,
-                 valid, X, y, *, variant, update):
+                 valid, X, y, *, variant, update, msg_scale=None,
+                 msg_zp=None):
         del update  # the kernel implements the Pegasos step itself
         lw, lt, cw, ct, ptr, cnt = fused_receive_apply(
             last_w, last_t, cache.w, cache.t, cache.ptr, cache.count,
             msg_w, msg_t, valid.astype(jnp.int32), X, y,
+            msg_scale=msg_scale, msg_zp=msg_zp,
             variant=variant, lam=lam, interpret=interpret)
         new_cache = ModelCache(cw, ct, ptr, cnt)
         fw, ft = cache_mod.freshest(new_cache)
@@ -327,23 +349,33 @@ def _shard_apply(base_apply, mesh, axis: str):
 
     Every operand carries the node dimension (leading for state/example
     arrays, second for the (K, N, ...) message stack) and the computation is
-    purely per-node, so the body needs no collectives."""
+    purely per-node, so the body needs no collectives. The optional
+    ``msg_scale``/``msg_zp`` metadata of the int8-Pallas path shards like
+    the message stack."""
     ps_n, ps_kn = PS(axis), PS(None, axis)
 
     def apply_fn(last_w, last_t, fresh_w, fresh_t, cache, msg_w, msg_t,
-                 valid, X, y, *, variant, update):
-        def inner(lw, lt, fw, ft, cw, ct, cp, cc, mw, mt, vl, Xs, ys):
+                 valid, X, y, *, variant, update, msg_scale=None,
+                 msg_zp=None):
+        quantized = msg_scale is not None
+
+        def inner(lw, lt, fw, ft, cw, ct, cp, cc, mw, mt, vl, Xs, ys,
+                  *meta):
+            kw = dict(msg_scale=meta[0], msg_zp=meta[1]) if quantized else {}
             lw2, lt2, fw2, ft2, c2 = base_apply(
                 lw, lt, fw, ft, ModelCache(cw, ct, cp, cc), mw, mt, vl,
-                Xs, ys, variant=variant, update=update)
+                Xs, ys, variant=variant, update=update, **kw)
             return lw2, lt2, fw2, ft2, c2.w, c2.t, c2.ptr, c2.count
-        f = shard_map_compat(
-            inner, mesh=mesh,
-            in_specs=(ps_n,) * 8 + (ps_kn,) * 3 + (ps_n,) * 2,
-            out_specs=(ps_n,) * 8)
-        lw2, lt2, fw2, ft2, cw, ct, cp, cc = f(
-            last_w, last_t, fresh_w, fresh_t, cache.w, cache.t, cache.ptr,
-            cache.count, msg_w, msg_t, valid, X, y)
+
+        in_specs = (ps_n,) * 8 + (ps_kn,) * 3 + (ps_n,) * 2
+        args = [last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
+                cache.ptr, cache.count, msg_w, msg_t, valid, X, y]
+        if quantized:
+            in_specs = in_specs + (ps_kn,) * 2
+            args = args + [msg_scale, msg_zp]
+        f = shard_map_compat(inner, mesh=mesh, in_specs=in_specs,
+                             out_specs=(ps_n,) * 8)
+        lw2, lt2, fw2, ft2, cw, ct, cp, cc = f(*args)
         return lw2, lt2, fw2, ft2, ModelCache(cw, ct, cp, cc)
 
     return apply_fn
@@ -352,7 +384,8 @@ def _shard_apply(base_apply, mesh, axis: str):
 @functools.lru_cache(maxsize=64)
 def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     delay_max: int, use_pallas: bool, interpret: bool,
-                    mesh, axis: Optional[str], compact: bool):
+                    mesh, axis: Optional[str], compact: bool,
+                    wire: Optional[str]):
     """Jitted data-plane chunk runner, cached per configuration.
 
     Caching the jitted callable (rather than rebuilding the closure per
@@ -364,7 +397,15 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     densely (most receiving nodes receive exactly once), rounds >= 2 run
     only on the gathered multi-receiver subset and scatter back — the
     K-round apply cost tracks the delivered-message count instead of K·N.
-    Requires the plain ``_vector_apply`` (no mesh sharding, no Pallas)."""
+    Requires the plain ``_vector_apply`` (no mesh sharding, no Pallas).
+
+    ``wire`` is the wire-dtype name. The affine int8 dtypes quantize at
+    send (per-message f16 scale/zero-point written into the buf_scale/
+    buf_zp carry lanes) and dequantize at delivery — in the scan body for
+    the jnp paths, in VMEM for the Pallas kernel. "int8_sr" derives its
+    per-cycle stochastic-rounding key from the scanned key stream exactly
+    like the reference engine's ``k_recv`` (first slot of the 4-way split),
+    so cross-engine parity stays bitwise."""
     update = make_update(learner, lam=lam, eta=eta)
     apply_fn = _pallas_apply(lam, interpret) if use_pallas else _vector_apply
     if mesh is not None and axis is not None:
@@ -372,47 +413,77 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     if compact and (use_pallas or mesh is not None):
         raise ValueError("compacted rounds require the plain vector apply")
     D = delay_max
+    quantized = is_quantized_wire(wire)
+    stochastic = is_stochastic_wire(wire)
 
-    def chunk_fn(carry, tables, X, y, X_test, y_test, eval_idx):
+    def chunk_fn(carry, tables, keydata, X, y, X_test, y_test, eval_idx):
         def records(clock):
             if X.ndim == 3:                   # multi-record nodes
                 rec = clock % X.shape[1]
                 return X[:, rec, :], y[:, rec]
             return X, y
 
-        def dense_body(carry, src_slot):
+        def gather(buf_w, buf_scale, buf_zp, idx, d):
+            """Winning payloads for slot table ``idx``, dequantized for the
+            jnp apply paths; the Pallas path gets the raw int8 codes plus
+            their scale/zero-point as kwargs (in-kernel dequant)."""
+            msg_w = buf_w.reshape(-1, d)[idx]
+            if not quantized:
+                return msg_w, {}
+            msc = buf_scale.reshape(-1)[idx]
+            mzp = buf_zp.reshape(-1)[idx]
+            if use_pallas:
+                return msg_w, dict(msg_scale=msc, msg_zp=mzp)
+            return dequantize_wire(msg_w, msc, mzp), {}
+
+        def send(buf_w, buf_scale, buf_zp, fresh_w, clock, kd):
+            """Refresh this cycle's buffer row (quantizing on the way in)."""
+            if not quantized:
+                return (buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype)),
+                        buf_scale, buf_zp)
+            key = None
+            if stochastic:
+                # k_recv: slot 0 of the reference engine's per-cycle split
+                key = jax.random.split(jax.random.wrap_key_data(kd), 4)[0]
+            q, sc, zp = quantize_wire(fresh_w, wire, key=key)
+            return (buf_w.at[clock % D].set(q),
+                    buf_scale.at[clock % D].set(sc),
+                    buf_zp.at[clock % D].set(zp))
+
+        def dense_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
-             buf_w, buf_t, clock) = carry
+             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
+            (src_slot,), kd = inp
             valid = src_slot >= 0             # (K, n); -1 = no receive
             idx = jnp.maximum(src_slot, 0)
             n, d = last_w.shape
             Xc, yc = records(clock)
-            flat_w = buf_w.reshape(-1, d)
-            flat_t = buf_t.reshape(-1)
-            msg_w = flat_w[idx]
-            msg_t = flat_t[idx]
+            msg_w, extra = gather(buf_w, buf_scale, buf_zp, idx, d)
+            msg_t = buf_t.reshape(-1)[idx]
             last_w, last_t, fresh_w, fresh_t, cache = apply_fn(
                 last_w, last_t, fresh_w, fresh_t,
                 ModelCache(cw, ct, ptr, cnt), msg_w, msg_t, valid, Xc, yc,
-                variant=variant, update=update)
-            buf_w = buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype))
+                variant=variant, update=update, **extra)
+            buf_w, buf_scale, buf_zp = send(buf_w, buf_scale, buf_zp,
+                                            fresh_w, clock, kd)
             buf_t = buf_t.at[clock % D].set(fresh_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
-                    cache.ptr, cache.count, buf_w, buf_t, clock + 1), None
+                    cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
+                    clock + 1), None
 
         def compact_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
-             buf_w, buf_t, clock) = carry
-            src0, ridx, rslot = inp
+             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
+            (src0, ridx, rslot), kd = inp
             n, d = last_w.shape
             Xc, yc = records(clock)
-            flat_w = buf_w.reshape(-1, d)
             flat_t = buf_t.reshape(-1)
             # round 1, dense over all nodes (same math as a K=1 dense apply)
             i0 = jnp.maximum(src0, 0)
+            msg_w0, _ = gather(buf_w, buf_scale, buf_zp, i0[None], d)
             last_w, last_t, fresh_w, fresh_t, cache = apply_fn(
                 last_w, last_t, fresh_w, fresh_t,
-                ModelCache(cw, ct, ptr, cnt), flat_w[i0][None],
+                ModelCache(cw, ct, ptr, cnt), msg_w0,
                 flat_t[i0][None], (src0 >= 0)[None], Xc, yc,
                 variant=variant, update=update)
             # rounds >= 2: gather the multi-receiver subset, continue the
@@ -424,9 +495,10 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             sc = jnp.maximum(rslot, 0)
             sub = ModelCache(cache.w[gi], cache.t[gi], cache.ptr[gi],
                              cache.count[gi])
+            msg_w2, _ = gather(buf_w, buf_scale, buf_zp, sc, d)
             lw2, lt2, fw2, ft2, sub2 = apply_fn(
                 last_w[gi], last_t[gi], fresh_w[gi], fresh_t[gi], sub,
-                flat_w[sc], flat_t[sc], vc, Xc[gi], yc[gi],
+                msg_w2, flat_t[sc], vc, Xc[gi], yc[gi],
                 variant=variant, update=update)
             si = jnp.where(pad, n, gi)        # out of bounds => dropped
             last_w = last_w.at[si].set(lw2, mode="drop")
@@ -437,14 +509,15 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                                cache.t.at[si].set(sub2.t, mode="drop"),
                                cache.ptr.at[si].set(sub2.ptr, mode="drop"),
                                cache.count.at[si].set(sub2.count, mode="drop"))
-            buf_w = buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype))
+            buf_w, buf_scale, buf_zp = send(buf_w, buf_scale, buf_zp,
+                                            fresh_w, clock, kd)
             buf_t = buf_t.at[clock % D].set(fresh_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
-                    cache.ptr, cache.count, buf_w, buf_t, clock + 1), None
+                    cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
+                    clock + 1), None
 
         body = compact_body if compact else dense_body
-        xs = tables if compact else tables[0]
-        carry, _ = lax.scan(body, carry, xs)
+        carry, _ = lax.scan(body, carry, (tables, keydata))
         cache = ModelCache(carry[4], carry[5], carry[6], carry[7])
         errs = _eval(cache, eval_idx, X_test, y_test)
         return carry, errs
@@ -476,10 +549,13 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     gather/apply/scatter only the receiving nodes); default: on whenever the
     plain vector apply runs (no mesh, no Pallas) and k_rounds > 1. A chunk
     whose multi-receiver round is near-full (> N/2) falls back to the dense
-    table. ``cfg.wire_dtype`` ("bf16"/"f16") stores the in-flight payload
-    buffer — the engine's dominant memory — in the wire dtype; merge math
-    stays f32 and the identical quantization is applied by the reference
-    engine, so cross-engine parity holds under quantization too."""
+    table. ``cfg.wire_dtype`` ("bf16"/"f16"/"int8"/"int8_sr") stores the
+    in-flight payload buffer — the engine's dominant memory — in the wire
+    dtype (the int8 dtypes add (D, N) f16 scale/zero-point lanes); merge
+    math stays f32 and the identical quantization is applied by the
+    reference engine, so cross-engine parity holds under quantization too,
+    including the stochastic-rounding noise (both engines draw it from the
+    same per-cycle ``k_recv`` threefry slot)."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
     wdt = resolve_wire_dtype(cfg.wire_dtype)
@@ -515,28 +591,39 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
 
     def get_chunk_fn(compact: bool):
         return _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
-                               D, use_pallas, interpret, mesh, axis, compact)
+                               D, use_pallas, interpret, mesh, axis, compact,
+                               cfg.wire_dtype)
 
-    # data-plane carry: models + cache + payload lanes of the buffer
+    # data-plane carry: models + cache + payload lanes of the buffer (the
+    # int8 wire dtypes add the (D, N) f16 scale/zero-point lanes; empty
+    # (0, 0) arrays otherwise so the float paths carry nothing extra)
+    meta_shape = (D, n) if is_quantized_wire(cfg.wire_dtype) else (0, 0)
     carry = (jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              *cache_mod.init_cache(n, cfg.cache_size, d),
              jnp.zeros((D, n, d), buf_dtype), jnp.zeros((D, n), jnp.int32),
+             jnp.zeros(meta_shape, jnp.float16),
+             jnp.zeros(meta_shape, jnp.float16),
              jnp.zeros((), jnp.int32))
     if node_sharding is not None:
         put_n = lambda a: jax.device_put(a, node_sharding)
-        put_dn = lambda a: jax.device_put(a, NamedSharding(mesh, PS(None, axis)))
+        put_dn = lambda a: (jax.device_put(
+            a, NamedSharding(mesh, PS(None, axis))) if a.size else a)
         carry = tuple(put_n(a) for a in carry[:8]) + (
-            put_dn(carry[8]), put_dn(carry[9]), carry[10])
+            put_dn(carry[8]), put_dn(carry[9]), put_dn(carry[10]),
+            put_dn(carry[11]), carry[12])
         X, y = put_n(X), put_n(y)
 
     res = SimResult([], [], [], [], 0, cfg)
-    res.buf_payload_bytes = D * n * d * wire_itemsize(cfg.wire_dtype)
+    res.buf_payload_bytes = payload_buffer_bytes(D, n, d, cfg.wire_dtype)
     pts = eval_points(cycles, eval_every)
     if not pts:                       # cycles == 0: nothing to simulate
         return res
 
     keys = key_schedule(seed, cycles)
+    # raw uint32 key data for the scan body (the SR quantizer re-derives the
+    # reference engine's per-cycle k_recv from it; DCE'd when not needed)
+    keydata = jnp.asarray(jax.random.key_data(keys))
     router = _HostRouter(n, D)
     bounds = list(zip([0] + pts[:-1], pts))
 
@@ -580,10 +667,11 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     errs_pending = []
     pending = route(0)
     for i, p in enumerate(pts):
+        lo, hi = bounds[i]
         is_compact, tables, stats = pending
         carry, errs = get_chunk_fn(is_compact)(
-            carry, tuple(jnp.asarray(a) for a in tables), X, y,
-            X_test, y_test, eval_idx)
+            carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
+            X, y, X_test, y_test, eval_idx)
         if i + 1 < len(pts):
             pending = route(i + 1)    # overlaps the in-flight device scan
         res.sent_total += stats["sent"]

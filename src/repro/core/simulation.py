@@ -19,6 +19,15 @@ population: the in-flight message buffer is a (delay_max, N) slot array
 before it is overwritten), and simultaneous arrivals at one node are applied
 sequentially in K winner-per-destination rounds — matching the event-by-event
 semantics of the paper's simulator while staying fully vectorized.
+
+Beyond-paper: ``GossipLinearConfig.wire_dtype`` selects the wire
+representation of the transmitted model (bf16/f16 cast, or per-message
+affine int8 with optional stochastic rounding — see
+``repro.core.gossip_optimizer.quantize_wire``); merge arithmetic is always
+f32. This module is the *reference engine*; ``repro.core.sharded_engine``
+runs the identical protocol at mega-population scale (the engines' parity
+contract is documented in docs/ENGINES.md, the paper-to-code map in
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -34,7 +43,10 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
-from repro.core.gossip_optimizer import resolve_wire_dtype, wire_itemsize
+from repro.core.gossip_optimizer import (dequantize_wire, is_quantized_wire,
+                                         is_stochastic_wire,
+                                         resolve_wire_dtype, quantize_wire,
+                                         wire_itemsize, wire_overhead_bytes)
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
 from repro.utils.metrics import cosine_similarity
@@ -46,6 +58,8 @@ class SimState(NamedTuple):
     cache: ModelCache
     buf_w: jnp.ndarray      # (D, N, d) in-flight payloads, slot = cycle % D
     buf_t: jnp.ndarray      # (D, N)
+    buf_scale: jnp.ndarray  # (D, N) f16 per-message quant scale ((0, 0) when
+    buf_zp: jnp.ndarray     # (D, N) f16 per-message zero-point   not int8)
     buf_dst: jnp.ndarray    # (D, N) int32 destination
     buf_arrival: jnp.ndarray  # (D, N) int32 absolute arrival cycle, -1 = none
     clock: jnp.ndarray      # () int32
@@ -53,14 +67,22 @@ class SimState(NamedTuple):
 
 def init_state(n: int, d: int, cache_size: int, delay_max: int,
                wire_dtype=None) -> SimState:
-    """``wire_dtype`` (jnp dtype or None): storage dtype of the in-flight
-    payload buffer — the bytes a real deployment would put on the wire."""
+    """``wire_dtype`` (name or None): wire dtype of the in-flight payload
+    buffer — the bytes a real deployment would put on the wire. The affine
+    int8 dtypes additionally allocate the (D, N) f16 scale/zero-point lanes
+    that ride alongside each message; for float wire dtypes those lanes are
+    empty (0, 0) arrays, so the non-quantized hot path is unchanged."""
+    quantized = is_quantized_wire(wire_dtype)
+    meta_shape = (delay_max, n) if quantized else (0, 0)
     return SimState(
         last_w=jnp.zeros((n, d), jnp.float32),
         last_t=jnp.zeros((n,), jnp.int32),
         cache=cache_mod.init_cache(n, cache_size, d),
-        buf_w=jnp.zeros((delay_max, n, d), wire_dtype or jnp.float32),
+        buf_w=jnp.zeros((delay_max, n, d),
+                        resolve_wire_dtype(wire_dtype) or jnp.float32),
         buf_t=jnp.zeros((delay_max, n), jnp.int32),
+        buf_scale=jnp.zeros(meta_shape, jnp.float16),
+        buf_zp=jnp.zeros(meta_shape, jnp.float16),
         buf_dst=jnp.zeros((delay_max, n), jnp.int32),
         buf_arrival=jnp.full((delay_max, n), -1, jnp.int32),
         clock=jnp.zeros((), jnp.int32),
@@ -127,10 +149,18 @@ def apply_receives(last_w, last_t, cache: ModelCache, msg_w, msg_t, valid,
 
 def cycle_core(state: SimState, X, y, online, key, *, variant: str,
                learner: str, lam: float, eta: float, drop: float,
-               delay_max: int, k_rounds: int, sampler: str):
-    """One gossip cycle for the whole population (traceable core)."""
+               delay_max: int, k_rounds: int, sampler: str,
+               wire_dtype: Optional[str] = None):
+    """One gossip cycle for the whole population (traceable core).
+
+    ``wire_dtype`` is the wire-dtype *name* (static): the affine int8 modes
+    quantize at send time and dequantize before the f32 merge; ``k_recv`` —
+    the first slot of the per-cycle 4-way threefry split, unused by the
+    float wire dtypes — seeds the stochastic-rounding noise, so "int8_sr"
+    stays bitwise-reproducible and both engines draw identical noise."""
     n, d = state.last_w.shape
     D = delay_max
+    quantized = is_quantized_wire(wire_dtype)
     update = make_update(learner, lam=lam, eta=eta)
     k_recv, k_dst, k_delay, k_drop = jax.random.split(key, 4)
 
@@ -149,7 +179,12 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     flat_t = state.buf_t.reshape(-1)
     # payloads were quantized to the wire dtype at send time; the merge
     # arithmetic runs in f32 (same contract as gossip_merge exchange_dtype)
-    msg_w = flat_w[src_slot].astype(jnp.float32)  # (K, N, d) winning payloads
+    if quantized:
+        msg_w = dequantize_wire(flat_w[src_slot],
+                                state.buf_scale.reshape(-1)[src_slot],
+                                state.buf_zp.reshape(-1)[src_slot])
+    else:
+        msg_w = flat_w[src_slot].astype(jnp.float32)  # (K, N, d) winners
     msg_t = flat_t[src_slot]
     last_w, last_t, cache = apply_receives(
         state.last_w, state.last_t, state.cache, msg_w, msg_t, valid, X, y,
@@ -170,23 +205,34 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     arrival = jnp.where(send_ok, state.clock + delay, -1)
 
     slot = state.clock % D
-    buf_w = state.buf_w.at[slot].set(fresh_w.astype(state.buf_w.dtype))
+    if quantized:
+        q, sc, zp = quantize_wire(
+            fresh_w, wire_dtype,
+            key=k_recv if is_stochastic_wire(wire_dtype) else None)
+        buf_w = state.buf_w.at[slot].set(q)
+        buf_scale = state.buf_scale.at[slot].set(sc)
+        buf_zp = state.buf_zp.at[slot].set(zp)
+    else:
+        buf_w = state.buf_w.at[slot].set(fresh_w.astype(state.buf_w.dtype))
+        buf_scale, buf_zp = state.buf_scale, state.buf_zp
     buf_t = state.buf_t.at[slot].set(fresh_t)
     buf_dst = state.buf_dst.at[slot].set(dst)
     buf_arrival = state.buf_arrival.at[slot].set(arrival)
 
     stats = {"delivered": delivered, "overflow": overflow,
              "sent": send_ok.sum(), "lost": lost}
-    return SimState(last_w, last_t, cache, buf_w, buf_t, buf_dst, buf_arrival,
-                    state.clock + 1), stats
+    return SimState(last_w, last_t, cache, buf_w, buf_t, buf_scale, buf_zp,
+                    buf_dst, buf_arrival, state.clock + 1), stats
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "learner", "lam",
                                              "eta", "drop", "delay_max",
-                                             "k_rounds", "sampler"))
+                                             "k_rounds", "sampler",
+                                             "wire_dtype"))
 def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
                    learner: str, lam: float, eta: float, drop: float,
-                   delay_max: int, k_rounds: int, sampler: str):
+                   delay_max: int, k_rounds: int, sampler: str,
+                   wire_dtype: Optional[str] = None):
     """One gossip cycle for the whole population. Returns (state, stats).
 
     ``stats`` message economy (per cycle): every message sent at cycle c is
@@ -196,7 +242,8 @@ def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
     ``sum(sent) == sum(delivered + lost + overflow) + in-flight``."""
     return cycle_core(state, X, y, online, key, variant=variant,
                       learner=learner, lam=lam, eta=eta, drop=drop,
-                      delay_max=delay_max, k_rounds=k_rounds, sampler=sampler)
+                      delay_max=delay_max, k_rounds=k_rounds, sampler=sampler,
+                      wire_dtype=wire_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -311,8 +358,19 @@ class SimResult:
 
 
 def message_wire_bytes(d: int, wire_dtype_name) -> int:
-    """Bytes per transmitted model: d coefficients + the int32 counter."""
-    return d * wire_itemsize(wire_dtype_name) + 4
+    """Bytes per transmitted model: d coefficients + the int32 counter,
+    plus the f16 scale/zero-point pair for the affine int8 wire dtypes."""
+    return (d * wire_itemsize(wire_dtype_name) + 4
+            + wire_overhead_bytes(wire_dtype_name))
+
+
+def payload_buffer_bytes(delay_max: int, n: int, d: int,
+                         wire_dtype_name) -> int:
+    """Footprint of the in-flight (D, N, d) payload buffer in the wire
+    dtype, including the (D, N) f16 scale/zero-point lanes when quantized
+    — the number both engines report as ``SimResult.buf_payload_bytes``."""
+    return delay_max * n * (d * wire_itemsize(wire_dtype_name)
+                            + wire_overhead_bytes(wire_dtype_name))
 
 
 def sim_setup(cfg: GossipLinearConfig, X, y, X_test, y_test, *, cycles: int,
@@ -357,8 +415,22 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                    **engine_kwargs) -> SimResult:
     """Run the full protocol for ``cycles`` gossip cycles.
 
+    The one entry point for both execution engines. Inputs: ``cfg`` fixes
+    the *protocol* (learner, CREATEMODEL variant, failure model, wire
+    dtype); the keyword arguments fix the *run* (length, eval cadence,
+    seed, peer sampler, receive rounds) and the *execution backend* —
+    none of which may change the simulated protocol.
+
     ``X`` may be (N, d) — the paper's one-record-per-node model — or
     (N, k, d) for k local records per node (Section II's generalization).
+
+    Returns a :class:`SimResult`: per-eval-point error curves
+    (``err_fresh`` = PREDICT, ``err_voted`` = VOTEDPREDICT, over
+    ``eval_nodes`` random nodes), the pairwise model ``similarity``
+    diagnostic, the exact message economy (``sent_total`` ==
+    ``delivered_total + lost_total + overflow_total`` + in-flight), and
+    the bandwidth account (``wire_bytes_total``, ``buf_payload_bytes``)
+    under ``cfg.wire_dtype``.
 
     ``engine`` selects the execution backend:
 
@@ -393,12 +465,11 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         eval_nodes=eval_nodes)
 
     D = max(cfg.delay_max_cycles, 1)
-    wdt = resolve_wire_dtype(cfg.wire_dtype)
-    state = init_state(n, d, cfg.cache_size, D, wire_dtype=wdt)
+    state = init_state(n, d, cfg.cache_size, D, wire_dtype=cfg.wire_dtype)
     key = jax.random.key(seed)
 
     res = SimResult([], [], [], [], 0, cfg)
-    res.buf_payload_bytes = D * n * d * wire_itemsize(cfg.wire_dtype)
+    res.buf_payload_bytes = payload_buffer_bytes(D, n, d, cfg.wire_dtype)
     for c in range(cycles):
         key, sub = jax.random.split(key)
         state, stats = simulate_cycle(
@@ -406,7 +477,7 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             variant=cfg.variant, learner=cfg.learner, lam=cfg.lam,
             eta=cfg.eta, drop=cfg.drop_prob,
             delay_max=D, k_rounds=k_rounds,
-            sampler=sampler)
+            sampler=sampler, wire_dtype=cfg.wire_dtype)
         res.overflow_total += int(stats["overflow"])
         res.sent_total += int(stats["sent"])
         res.delivered_total += int(stats["delivered"])

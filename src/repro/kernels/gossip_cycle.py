@@ -12,7 +12,10 @@ sequential receives in one pass: HBM traffic per node drops from
 O(K·(C+3)·d) to the minimal read-once/write-once O((K+C+2)·d).
 
 Supports the three CREATEMODEL variants (RW / MU / UM, Algorithm 2) with the
-Pegasos update — the paper's P2Pegasos hot path. The pure-jnp oracle is
+Pegasos update — the paper's P2Pegasos hot path. Message operands may arrive
+in any wire dtype (f32/bf16/f16 upcast in VMEM; affine int8 dequantized
+in VMEM from per-message f16 scale/zero-point), so HBM message traffic is
+paid at wire precision. The pure-jnp oracle is
 ``repro.core.simulation.apply_receives``; parity is tested in interpret mode
 on CPU (tests/test_sharded_engine.py).
 """
@@ -40,10 +43,15 @@ def _pegasos(w, t, x, y, lam: float):
     return decay * w + upd, t
 
 
-def _cycle_kernel(msg_w_ref, msg_t_ref, valid_ref, x_ref, y_ref,
-                  last_w_ref, last_t_ref, cw_ref, ct_ref, ptr_ref, cnt_ref,
-                  out_lw, out_lt, out_cw, out_ct, out_ptr, out_cnt,
+def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
+                  y_ref, last_w_ref, last_t_ref, cw_ref, ct_ref, ptr_ref,
+                  cnt_ref, out_lw, out_lt, out_cw, out_ct, out_ptr, out_cnt,
                   *, variant: str, lam: float, c_real: int, k_rounds: int):
+    """``msc_ref``/``mzp_ref`` are the per-message f16 scale/zero-point of
+    the affine int8 wire dtypes (None when the payload is float): messages
+    stream into VMEM as one byte per coefficient and are dequantized here —
+    the same ``q * scale + zp`` expression (and op order) as
+    ``gossip_optimizer.dequantize_wire``, so kernel and jnp paths agree."""
     lw = last_w_ref[...].astype(jnp.float32)       # (BLK, d)
     lt = last_t_ref[...]                           # (BLK,)
     cw = cw_ref[...].astype(jnp.float32)           # (BLK, C_pad, d)
@@ -57,6 +65,9 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, valid_ref, x_ref, y_ref,
     for kk in range(k_rounds):
         vm = valid_ref[kk, :] > 0                  # (BLK,) receives this round
         mw = msg_w_ref[kk, :, :].astype(jnp.float32)
+        if msc_ref is not None:                    # in-VMEM dequant
+            mw = (mw * msc_ref[kk, :].astype(jnp.float32)[:, None]
+                  + mzp_ref[kk, :].astype(jnp.float32)[:, None])
         mt = msg_t_ref[kk, :]
         if variant == "mu":                        # update(merge(m, last))
             nw, nt = _pegasos((mw + lw) / 2.0, jnp.maximum(mt, lt), x, y, lam)
@@ -86,24 +97,34 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, valid_ref, x_ref, y_ref,
     out_cnt[...] = cnt
 
 
+def _kernel_no_meta(msg_w_ref, msg_t_ref, valid_ref, *rest, **kw):
+    """Adapter for float payloads: no scale/zero-point operands."""
+    _cycle_kernel(msg_w_ref, msg_t_ref, None, None, valid_ref, *rest, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("variant", "lam", "interpret"))
 def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
-                        msg_w, msg_t, valid, x, y, *, variant: str,
-                        lam: float, interpret: bool = False):
+                        msg_w, msg_t, valid, x, y, *, msg_scale=None,
+                        msg_zp=None, variant: str, lam: float,
+                        interpret: bool = False):
     """Fused K-receive apply for one cycle.
 
     last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, d);
     msg_t, valid: (K, N) int32; returns the updated
     (last_w, last_t, cache_w, cache_t, ptr, count).
 
-    ``msg_w`` may arrive in a reduced wire dtype (bf16/f16 — the simulator's
-    in-flight buffer under ``cfg.wire_dtype``); the kernel upcasts in VMEM,
-    so HBM message traffic is paid at wire precision. The node block widens
-    to the 16-sublane minimum tile for 2-byte operands."""
+    ``msg_w`` may arrive in a reduced wire dtype (the simulator's in-flight
+    buffer under ``cfg.wire_dtype``): bf16/f16 are upcast in VMEM; int8
+    payloads additionally pass their per-message f16 ``msg_scale``/
+    ``msg_zp`` (K, N) and are affine-dequantized in VMEM. Either way HBM
+    message traffic is paid at wire precision. The node block widens to the
+    minimum sublane tile of the wire dtype (16 for 2-byte, 32 for 1-byte
+    operands)."""
     n, d = last_w.shape
     _, c, _ = cache_w.shape
     k = msg_w.shape[0]
-    blk = BLK_N if jnp.dtype(msg_w.dtype).itemsize >= 4 else max(BLK_N, 16)
+    quantized = msg_scale is not None
+    blk = max(BLK_N, 32 // jnp.dtype(msg_w.dtype).itemsize)
 
     pad_nd = lambda a: _pad_to(_pad_to(a, LANE, 1), blk, 0)
     pad_n = lambda a: _pad_to(a, blk, 0)
@@ -126,11 +147,22 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
     cvec = pl.BlockSpec((blk, cp, dp), lambda i: (i, 0, 0))
     csca = pl.BlockSpec((blk, cp), lambda i: (i, 0))
 
+    if quantized:
+        kernel = functools.partial(_cycle_kernel, variant=variant, lam=lam,
+                                   c_real=c, k_rounds=k)
+        meta_args = (_pad_to(msg_scale, blk, 1), _pad_to(msg_zp, blk, 1))
+        meta_specs = [ksca, ksca]
+    else:
+        kernel = functools.partial(_kernel_no_meta, variant=variant, lam=lam,
+                                   c_real=c, k_rounds=k)
+        meta_args = ()
+        meta_specs = []
+
     outs = pl.pallas_call(
-        functools.partial(_cycle_kernel, variant=variant, lam=lam,
-                          c_real=c, k_rounds=k),
+        kernel,
         grid=grid,
-        in_specs=[kvec, ksca, ksca, vec, sca, vec, sca, cvec, csca, sca, sca],
+        in_specs=[kvec, ksca, *meta_specs, ksca, vec, sca, vec, sca, cvec,
+                  csca, sca, sca],
         out_specs=[vec, sca, cvec, csca, sca, sca],
         out_shape=[
             jax.ShapeDtypeStruct((np_, dp), last_w.dtype),
@@ -141,7 +173,7 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
             jax.ShapeDtypeStruct((np_,), jnp.int32),
         ],
         interpret=interpret,
-    )(mw, mt, vl, xp, yp, lw, lt, cwp, ctp, ptrp, cntp)
+    )(mw, mt, *meta_args, vl, xp, yp, lw, lt, cwp, ctp, ptrp, cntp)
     lw_n, lt_n, cw_n, ct_n, ptr_n, cnt_n = outs
     return (lw_n[:n, :d], lt_n[:n], cw_n[:n, :c, :d], ct_n[:n, :c],
             ptr_n[:n], cnt_n[:n])

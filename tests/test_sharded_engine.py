@@ -71,11 +71,13 @@ def test_sharded_matches_reference_failure_scenario():
     assert ref.lost_total == sh.lost_total > 0  # churn actually loses messages
 
 
-@pytest.mark.parametrize("wire", [None, "bf16"])
+@pytest.mark.parametrize("wire", [None, "bf16", "int8", "int8_sr"])
 @pytest.mark.parametrize("variant", ["mu", "um", "rw"])
 def test_sharded_pallas_kernel_matches_reference(variant, wire):
     """The fused gossip_cycle kernel path (interpret mode on CPU), including
-    bf16 wire message operands (the widened 16-sublane node block)."""
+    bf16 wire message operands (the widened 16-sublane node block) and
+    affine-int8 operands (32-sublane block, in-kernel dequant from the
+    per-message f16 scale/zero-point)."""
     X, y, Xt, yt = toy(n=64)
     cfg = small_cfg(n_nodes=64, variant=variant, drop_prob=0.2,
                     delay_max_cycles=3, wire_dtype=wire)
@@ -284,6 +286,17 @@ _MESH_SCRIPT = textwrap.dedent("""
     for a, b in zip(ref.err_fresh, sh.err_fresh):
         assert abs(a - b) <= 0.02, (ref.err_fresh, sh.err_fresh)
     assert ref.sent_total == sh.sent_total
+
+    # int8 wire dtype under node sharding: the (D, N) scale/zero-point
+    # lanes shard with the buffer and parity still holds
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, wire_dtype="int8_sr")
+    ref8 = run_simulation(cfg8, Xtr, ytr, Xt, yt, **kw)
+    sh8 = run_simulation(cfg8, Xtr, ytr, Xt, yt, engine="sharded",
+                         mesh=mesh, **kw)
+    for a, b in zip(ref8.err_fresh, sh8.err_fresh):
+        assert abs(a - b) <= 0.02, (ref8.err_fresh, sh8.err_fresh)
+    assert ref8.sent_total == sh8.sent_total
     print("MESH_PARITY_OK")
 """)
 

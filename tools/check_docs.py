@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs-link checker: fail when a doc references a symbol or file that no
+longer exists in the tree.
+
+Scans the markdown docs (docs/*.md, README.md) for inline-code spans and
+verifies, with a grep pass over the source tree, that every code-looking
+token still resolves:
+
+* path-like tokens (contain "/" or end in .py/.sh/.md/.json) must exist as
+  files or directories relative to the repo root;
+* dotted names rooted at a package (``repro.core.simulation.run_simulation``)
+  must resolve to a module file under src/ (or benchmarks/, tools/), and any
+  trailing attribute must appear in that module's source;
+* plain identifiers that look like symbols (contain "_" or "." or are
+  CamelCase, length >= 4) must appear somewhere in the source corpus.
+
+Everything else (shell flags, config prose, math) is ignored. Run directly
+or via tools/run_tests.sh; exits non-zero listing every stale reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(REPO.glob("docs/*.md")) + [REPO / "README.md"]
+SOURCE_DIRS = ["src", "benchmarks", "tools", "tests", "examples"]
+SOURCE_EXT = {".py", ".sh"}
+
+CODE_SPAN = re.compile(r"`([^`]+)`")
+TOKEN = re.compile(r"^[A-Za-z_][A-Za-z0-9_.]*$")
+CAMEL = re.compile(r"^[A-Z][a-z0-9]+[A-Z]")
+
+
+def source_corpus() -> str:
+    parts = []
+    for d in SOURCE_DIRS:
+        for fp in sorted((REPO / d).rglob("*")):
+            if fp.suffix in SOURCE_EXT and fp.is_file():
+                parts.append(fp.read_text(errors="ignore"))
+    return "\n".join(parts)
+
+
+def module_file(dotted: str):
+    """Longest prefix of a dotted name that is a module/package under the
+    import roots; returns (path, remainder_components) or None."""
+    comps = dotted.split(".")
+    for root in ("src", "."):
+        for cut in range(len(comps), 0, -1):
+            base = REPO / root / Path(*comps[:cut])
+            if base.with_suffix(".py").is_file():
+                return base.with_suffix(".py"), comps[cut:]
+            if base.is_dir() and (base / "__init__.py").is_file():
+                return base / "__init__.py", comps[cut:]
+    return None
+
+
+def looks_like_symbol(tok: str) -> bool:
+    return (len(tok) >= 4 and TOKEN.match(tok) is not None
+            and ("_" in tok or "." in tok or CAMEL.match(tok) is not None))
+
+
+def check_token(tok: str, corpus: str):
+    """Returns an error string, or None if the token resolves (or is not a
+    checkable code token)."""
+    tok = tok.strip().rstrip(",.;:")
+    # path-like: file.py, docs/ENGINES.md, tools/run_tests.sh, BENCH_x.json
+    if "/" in tok or tok.endswith((".py", ".sh", ".md", ".json")):
+        path = tok.split(":")[0].rstrip("/")          # strip :line refs
+        if not re.fullmatch(r"[\w./-]+", path):
+            return None
+        if "." not in path and not (REPO / path.split("/")[0]).is_dir():
+            return None       # prose like `sent/delivered/lost`, not a path
+        if not (REPO / path).exists():
+            return f"missing file: {tok}"
+        return None
+    if not looks_like_symbol(tok):
+        return None
+    if "." in tok:
+        hit = module_file(tok)
+        if hit is not None:
+            path, rest = hit
+            src = path.read_text(errors="ignore")
+            missing = [c for c in rest if c not in src]
+            if missing:
+                return f"symbol {'.'.join(missing)!r} not found in {path.relative_to(REPO)} (from `{tok}`)"
+            return None
+        # not module-rooted (jax.random.split, cfg.wire_dtype, …):
+        # every component should still appear somewhere in the corpus
+        tail = tok.split(".")[-1].replace("()", "")
+        if len(tail) >= 4 and tail not in corpus:
+            return f"symbol not found in source: {tok}"
+        return None
+    if tok.replace("()", "") not in corpus:
+        return f"symbol not found in source: {tok}"
+    return None
+
+
+def main() -> int:
+    corpus = source_corpus()
+    errors = []
+    for doc in DOC_FILES:
+        if not doc.is_file():
+            continue
+        for lineno, line in enumerate(doc.read_text().splitlines(), 1):
+            for span in CODE_SPAN.findall(line):
+                # multi-token spans (commands, signatures): check each token
+                for raw in re.split(r"[\s=(),]+", span):
+                    err = check_token(raw, corpus)
+                    if err:
+                        errors.append(
+                            f"{doc.relative_to(REPO)}:{lineno}: {err}")
+    if errors:
+        print("check_docs: stale documentation references:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"check_docs: OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

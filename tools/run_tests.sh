@@ -5,9 +5,14 @@
 #   tools/run_tests.sh --fast        inner-loop subset (skips the slow
 #                                    model-zoo and perf-profile suites)
 #   tools/run_tests.sh --bench-smoke fast subset, then the population-scaling
-#                                    benchmark in --quick mode — an engine
-#                                    perf regression fails loudly (and
-#                                    refreshes BENCH_population_scaling.json)
+#                                    and wire-quantization benchmarks in
+#                                    --quick mode — an engine perf regression
+#                                    fails loudly (and refreshes
+#                                    BENCH_population_scaling.json /
+#                                    BENCH_wire_quantization.json)
+#
+# Every mode first runs tools/check_docs.py, so a doc referencing a removed
+# symbol fails tier 1.
 #
 # Installs the optional test extras (hypothesis) when an installer and
 # network are available; the suite degrades gracefully without them
@@ -15,6 +20,8 @@
 # keeps the Section V equivalences covered).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+python tools/check_docs.py
 
 if ! python -c "import hypothesis" >/dev/null 2>&1; then
     echo "run_tests: hypothesis not installed; trying to install (best-effort)"
@@ -31,6 +38,7 @@ fi
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     python -m pytest -x -q -k "not models and not perf" "$@"
-    exec python -m benchmarks.run --quick --only population_scaling
+    exec python -m benchmarks.run --quick \
+        --only population_scaling,wire_quantization
 fi
 exec python -m pytest -x -q "$@"
