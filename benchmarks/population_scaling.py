@@ -2,22 +2,30 @@
 
 The paper's PeerSim runs stop near N ~ 10^4; related work ("On the Limit
 Performance of Floating Gossip") analyzes exactly the N→∞ regime. This bench
-measures node-cycles/sec over the sweep on the paper's FULL extreme scenario
-— 50% message drop, delays uniform in [Δ, 10Δ] AND 90%-online churn (the
-vectorized v2 trace makes churned 10^6 populations cheap to set up) — for:
+measures node-cycles/sec over the sweep on two scenario families:
 
-* ``reference``       the per-cycle driver (measured up to ``REF_MAX_N``);
-* ``sharded-dense``   PR 1's dense K-round apply (``compact_rounds=False``);
-* ``sharded``         compacted multi-receive rounds (the default path);
-* ``sharded-bf16``    compacted + bf16 wire dtype (halved payload buffer).
+* **extreme** (Fig. 1 lower row): 50% drop, delays uniform in [Δ, 10Δ],
+  90%-online churn — for ``reference`` (up to ``REF_MAX_N``),
+  ``sharded-dense`` (PR 1's dense K-round apply), ``sharded`` (occupancy-
+  chosen compacted rounds) and ``sharded-bf16`` (+ bf16 wire dtype);
+* **sparse delivery** (the Fig. 5–7 robustness regimes): online fraction
+  0.1/0.3 crossed with drop 0.5/0.8 under the 10Δ delay — where only a few
+  percent of the population receives per cycle. Here ``sharded-r1dense``
+  pins the PR 3 packing (round 1 applied densely, ``compact_mode=
+  "compact"``) against ``sharded`` (free to pick the delivery-proportional
+  ``compact_all`` packing), so the JSON's ``derived`` speedups record
+  exactly what round-1 compaction buys.
 
     PYTHONPATH=src python -m benchmarks.population_scaling [--quick]
     PYTHONPATH=src python -m benchmarks.run --only population_scaling
 
 Output: CSV rows (results/benchmarks/) plus the machine-readable perf
-trajectory ``BENCH_population_scaling.json`` at the repo root — per-N
-node-cycles/sec, in-flight payload buffer bytes, wire bytes, and the
-N=10^6 churn-trace generation time.
+trajectory ``BENCH_population_scaling.json`` at the repo root — per-row
+node-cycles/sec, buffer/wire bytes, compaction telemetry (chunk modes,
+round-1 occupancy), the sparse-vs-dense ``derived`` speedups, a bitwise
+cross-engine parity probe per wire dtype, and the N=10^6 churn-trace
+generation time. ``tools/check_bench_regression.py`` compares a fresh run
+against the committed JSON and fails loudly on perf regressions.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ from benchmarks.common import Timer, write_bench_json, write_csv
 REF_MAX_N = 100_000            # reference engine measured up to here
 SPEEDUP_AT_N = 100_000         # the acceptance-criterion comparison point
 CHURN_TRACE_N = 1_000_000      # churn-trace generation is timed at this N
+PARITY_N = 2_000               # cross-engine bitwise probe population
 
 
 def _dataset(n: int, d: int, seed: int = 0):
@@ -37,26 +46,55 @@ def _dataset(n: int, d: int, seed: int = 0):
     return X[:n], y[:n], X[n:], y[n:]
 
 
-def _cfg(n: int, d: int, wire_dtype=None):
-    from repro.configs.gossip_linear import GossipLinearConfig
-    # The paper's full extreme failure scenario (Fig. 1 lower row): 50%
-    # message drop, delays uniform in [Δ, 10Δ], and churn with 90% of nodes
-    # online at any time. cache_size 4 keeps the (N, C, d) cache at 160 MB
-    # for N=10^6.
-    return GossipLinearConfig(name=f"scale-{n}", dim=d, n_nodes=n,
+def _cfg(n: int, d: int, scenario: str, wire_dtype=None):
+    from repro.configs.gossip_linear import (GossipLinearConfig,
+                                             with_failure_scenario)
+    # cache_size 4 keeps the (N, C, d) cache at 160 MB for N=10^6.
+    base = GossipLinearConfig(name=f"scale-{n}", dim=d, n_nodes=n,
                               n_test=512, class_ratio=(1, 1), lam=1e-3,
                               variant="mu", cache_size=4,
-                              drop_prob=0.5, delay_max_cycles=10,
-                              online_fraction=0.9, wire_dtype=wire_dtype)
+                              wire_dtype=wire_dtype)
+    return with_failure_scenario(base, scenario)
 
 
 # label -> (cfg wire_dtype, run_simulation engine kwargs)
-VARIANTS = [
+EXTREME_VARIANTS = [
     ("reference", None, dict(engine="reference")),
     ("sharded-dense", None, dict(engine="sharded", compact_rounds=False)),
     ("sharded", None, dict(engine="sharded", compact_rounds=True)),
     ("sharded-bf16", "bf16", dict(engine="sharded", compact_rounds=True)),
 ]
+
+# sparse family: the PR 3 packing (round 1 dense) vs the free engine
+SPARSE_VARIANTS = [
+    ("sharded-r1dense", None, dict(engine="sharded",
+                                   compact_mode="compact")),
+    ("sharded", None, dict(engine="sharded")),
+]
+
+SPARSE_SCENARIOS = ["sparse-d0.5-o0.3", "sparse-d0.5-o0.1",
+                    "sparse-d0.8-o0.3", "sparse-d0.8-o0.1"]
+
+
+def _parity_probe(d: int, cycles: int, k_rounds: int) -> dict:
+    """Bitwise cross-engine probe on the hardest sparse scenario: for every
+    wire dtype, reference == sharded-auto == sharded-dense error curves."""
+    from repro.core.simulation import run_simulation
+
+    X, y, Xt, yt = _dataset(PARITY_N, d)
+    out = {}
+    for wire in [None, "bf16", "f16", "int8", "int8_sr"]:
+        cfg = _cfg(PARITY_N, d, "sparse-d0.8-o0.1", wire_dtype=wire)
+        kw = dict(cycles=cycles, eval_every=10, seed=0, k_rounds=k_rounds)
+        ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+        auto = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+        dense = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                               compact_rounds=False, **kw)
+        out[wire or "f32"] = bool(
+            ref.err_fresh == auto.err_fresh == dense.err_fresh
+            and ref.err_voted == auto.err_voted == dense.err_voted
+            and ref.sent_total == auto.sent_total == dense.sent_total)
+    return out
 
 
 def run(quick: bool = False) -> dict:
@@ -71,43 +109,64 @@ def run(quick: bool = False) -> dict:
     k_rounds = 8
     sweep = [1_000, 10_000, 100_000] if quick else [
         1_000, 10_000, 100_000, 1_000_000]
+    sparse_sweep = [100_000] if quick else [100_000, 1_000_000]
     ref_max = 10_000 if quick else REF_MAX_N
 
     rows = []
     json_rows = []
     rates: dict = {}
     results: dict = {}
-    for n in sweep:
-        X, y, Xt, yt = _dataset(n, d)
-        for label, wire, kw in VARIANTS:
-            if label == "reference" and n > ref_max:
-                continue
-            cfg = _cfg(n, d, wire_dtype=wire)
-            # warm-up run compiles (same chunk length as the timed run);
-            # the timed run measures steady state. eval_every=10 gives
-            # paper-style curves and lets the sharded engine pipeline host
-            # routing against the in-flight device scan.
-            run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
-                           eval_every=10, seed=0, k_rounds=k_rounds, **kw)
+
+    def measure(label, scenario, n, wire, kw, X, y, Xt, yt):
+        cfg = _cfg(n, d, scenario, wire_dtype=wire)
+        # warm-up run compiles (same chunk length as the timed run); the
+        # timed runs measure steady state and the BEST of two is reported —
+        # a min-time estimator, since the shared 2-core container's noise
+        # is strictly additive. eval_every=10 gives paper-style curves and
+        # lets the sharded engine pipeline host routing against the
+        # in-flight device scan.
+        run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
+                       eval_every=10, seed=0, k_rounds=k_rounds, **kw)
+        secs = []
+        for _ in range(2):
             with Timer() as t:
                 res = run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
                                      eval_every=10, seed=0,
                                      k_rounds=k_rounds, **kw)
-            rate = n * cycles / t.s
-            rates[(label, n)] = rate
-            results[(label, n)] = res
-            rows.append((label, n, cycles, f"{t.s:.3f}", f"{rate:.0f}",
-                         f"{res.err_fresh[-1]:.4f}", wire or "f32",
-                         res.buf_payload_bytes, res.wire_bytes_total))
-            json_rows.append(dict(
-                engine=label, n_nodes=n, cycles=cycles, seconds=t.s,
-                node_cycles_per_sec=rate, err_fresh=res.err_fresh[-1],
-                wire_dtype=wire or "f32",
-                buf_payload_bytes=res.buf_payload_bytes,
-                wire_bytes_total=res.wire_bytes_total,
-                sent_total=res.sent_total,
-                delivered_total=res.delivered_total))
-            print("population_scaling," + ",".join(str(x) for x in rows[-1]))
+            secs.append(t.s)
+        best = min(secs)
+        rate = n * cycles / best
+        rates[(label, scenario, n)] = rate
+        results[(label, scenario, n)] = res
+        rows.append((label, scenario, n, cycles, f"{best:.3f}",
+                     f"{rate:.0f}", f"{res.err_fresh[-1]:.4f}",
+                     wire or "f32", res.buf_payload_bytes,
+                     res.wire_bytes_total))
+        dpc = np.asarray(res.delivered_per_cycle, dtype=np.float64)
+        json_rows.append(dict(
+            engine=label, scenario=scenario, n_nodes=n, cycles=cycles,
+            seconds=best, seconds_all=secs, node_cycles_per_sec=rate,
+            err_fresh=res.err_fresh[-1], wire_dtype=wire or "f32",
+            buf_payload_bytes=res.buf_payload_bytes,
+            wire_bytes_total=res.wire_bytes_total,
+            sent_total=res.sent_total,
+            delivered_total=res.delivered_total,
+            delivered_per_cycle_mean=float(dpc.mean()) if dpc.size else 0.0,
+            compaction=res.compaction))
+        print("population_scaling," + ",".join(str(x) for x in rows[-1]))
+
+    for n in sweep:
+        X, y, Xt, yt = _dataset(n, d)
+        for label, wire, kw in EXTREME_VARIANTS:
+            if label == "reference" and n > ref_max:
+                continue
+            measure(label, "extreme", n, wire, kw, X, y, Xt, yt)
+
+    for n in sparse_sweep:
+        X, y, Xt, yt = _dataset(n, d)
+        for scenario in SPARSE_SCENARIOS:
+            for label, wire, kw in SPARSE_VARIANTS:
+                measure(label, scenario, n, wire, kw, X, y, Xt, yt)
 
     # churn-trace generation cost at mega-population scale (acceptance:
     # the v2 vectorized sampler stays well under ~2 s at N=10^6)
@@ -116,35 +175,54 @@ def run(quick: bool = False) -> dict:
     print(f"population_scaling,churn_trace,v{CHURN_TRACE_VERSION},"
           f"n={CHURN_TRACE_N},cycles={cycles},{t_trace.s:.3f}s")
 
+    parity = _parity_probe(d, cycles=20, k_rounds=k_rounds)
+    print("population_scaling,parity," + ",".join(
+        f"{k}={'bitwise' if v else 'MISMATCH'}" for k, v in parity.items()))
+
     derived: dict = {}
     cmp_n = min(SPEEDUP_AT_N, ref_max)
-    if ("reference", cmp_n) in rates and ("sharded", cmp_n) in rates:
-        speedup = rates[("sharded", cmp_n)] / rates[("reference", cmp_n)]
+    if (("reference", "extreme", cmp_n) in rates
+            and ("sharded", "extreme", cmp_n) in rates):
+        speedup = (rates[("sharded", "extreme", cmp_n)]
+                   / rates[("reference", "extreme", cmp_n)])
         derived[f"sharded_vs_reference_speedup_at_{cmp_n}"] = speedup
         print(f"population_scaling,speedup@N={cmp_n},{speedup:.1f}x")
     top_n = sweep[-1]
-    if ("sharded-dense", top_n) in rates:
-        compact_speedup = rates[("sharded", top_n)] / rates[("sharded-dense", top_n)]
+    if ("sharded-dense", "extreme", top_n) in rates:
+        compact_speedup = (rates[("sharded", "extreme", top_n)]
+                           / rates[("sharded-dense", "extreme", top_n)])
         derived[f"compact_vs_dense_speedup_at_{top_n}"] = compact_speedup
         print(f"population_scaling,compact_speedup@N={top_n},"
               f"{compact_speedup:.2f}x")
-    if ("sharded-bf16", top_n) in results:
-        ratio = (results[("sharded-bf16", top_n)].buf_payload_bytes
-                 / results[("sharded", top_n)].buf_payload_bytes)
+    if ("sharded-bf16", "extreme", top_n) in results:
+        ratio = (results[("sharded-bf16", "extreme", top_n)].buf_payload_bytes
+                 / results[("sharded", "extreme", top_n)].buf_payload_bytes)
         derived[f"bf16_payload_buffer_ratio_at_{top_n}"] = ratio
         print(f"population_scaling,bf16_buffer_ratio@N={top_n},{ratio:.2f}")
+    sparse_top = sparse_sweep[-1]
+    for scenario in SPARSE_SCENARIOS:
+        a = rates.get(("sharded", scenario, sparse_top))
+        b = rates.get(("sharded-r1dense", scenario, sparse_top))
+        if a and b:
+            key = f"r1compact_vs_r1dense_speedup_at_{sparse_top}_{scenario}"
+            derived[key] = a / b
+            print(f"population_scaling,r1compact_speedup@N={sparse_top},"
+                  f"{scenario},{a / b:.2f}x")
 
     write_csv("population_scaling",
-              "engine,n_nodes,cycles,seconds,node_cycles_per_sec,err_fresh,"
-              "wire_dtype,buf_payload_bytes,wire_bytes_total",
+              "engine,scenario,n_nodes,cycles,seconds,node_cycles_per_sec,"
+              "err_fresh,wire_dtype,buf_payload_bytes,wire_bytes_total",
               rows)
+    from repro.configs.gossip_linear import FAILURE_SCENARIOS
     write_bench_json("population_scaling", dict(
         bench="population_scaling",
         quick=quick,
-        scenario=dict(drop_prob=0.5, delay_max_cycles=10,
-                      online_fraction=0.9, k_rounds=k_rounds, dim=d,
-                      cycles=cycles, variant="mu", cache_size=4),
+        protocol=dict(k_rounds=k_rounds, dim=d, cycles=cycles,
+                      variant="mu", cache_size=4),
+        scenarios={name: FAILURE_SCENARIOS[name]
+                   for name in ["extreme"] + SPARSE_SCENARIOS},
         rows=json_rows,
+        parity_bitwise=parity,
         churn_trace=dict(version=CHURN_TRACE_VERSION, n_nodes=CHURN_TRACE_N,
                          cycles=cycles, seconds=t_trace.s),
         derived=derived,

@@ -9,6 +9,13 @@ one ``lax.scan`` between eval points.
 
     PYTHONPATH=src python examples/million_nodes.py                # 10^6 nodes
     PYTHONPATH=src python examples/million_nodes.py --nodes 100000 # smaller
+    PYTHONPATH=src python examples/million_nodes.py --scenario sparse
+
+``--scenario sparse`` runs the paper's Fig. 5–7 robustness regime (80% drop,
+10% online, 10Δ delays): only a fraction of a percent of the population
+receives per cycle, and the engine's occupancy-based packing switches to the
+delivery-proportional ``compact_all`` path — the printed compaction report
+shows the chunk modes and receiver occupancy the router observed.
 
 Expected: the error curve tracks the paper's Fig. 1 shape — at fixed cycle
 count the per-cycle error is population-size-invariant (each node still sees
@@ -22,41 +29,50 @@ import time
 
 import numpy as np
 
+SCENARIOS = {"clean": "clean", "extreme": "extreme",
+             "sparse": "sparse-d0.8-o0.1"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=1_000_000)
     ap.add_argument("--cycles", type=int, default=50)
     ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="failure operating point: clean (no failures), "
+                         "extreme (drop=0.5, 10 cycle delays, 90%% online) "
+                         "or sparse (drop=0.8, 10%% online — the "
+                         "delivery-proportional compact_all regime)")
     ap.add_argument("--extreme", action="store_true",
-                    help="paper's extreme failure scenario "
-                         "(drop=0.5, delay up to 10 cycles, 90%% online)")
+                    help="alias for --scenario extreme")
     ap.add_argument("--wire-dtype",
                     choices=["bf16", "f16", "int8", "int8_sr"], default=None,
                     help="quantize payloads on the wire (and the in-flight "
                          "buffer — the engine's dominant memory) to this "
                          "dtype; merge math stays f32")
     args = ap.parse_args()
+    scenario = args.scenario or ("extreme" if args.extreme else "clean")
 
-    from repro.configs.gossip_linear import GossipLinearConfig
+    from repro.configs.gossip_linear import (GossipLinearConfig,
+                                             with_failure_scenario)
     from repro.core.simulation import run_simulation
     from repro.data.synthetic import make_linear_dataset
 
     n, d = args.nodes, args.dim
     rng = np.random.default_rng(0)
     X, y = make_linear_dataset(rng, n + 1000, d, noise=0.07, separation=2.5)
-    cfg = GossipLinearConfig(
-        name=f"million-{n}", dim=d, n_nodes=n, n_test=1000,
-        class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
-        drop_prob=0.5 if args.extreme else 0.0,
-        delay_max_cycles=10 if args.extreme else 1,
-        online_fraction=0.9 if args.extreme else 1.0,
-        wire_dtype=args.wire_dtype)
+    cfg = with_failure_scenario(
+        GossipLinearConfig(
+            name=f"million-{n}", dim=d, n_nodes=n, n_test=1000,
+            class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
+            wire_dtype=args.wire_dtype),
+        SCENARIOS[scenario])
 
     print(f"N={n:,} peers (one record each), d={d}, "
           f"{args.cycles} cycles, variant=MU, "
-          f"wire={args.wire_dtype or 'f32'}, "
-          f"{'extreme failures' if args.extreme else 'no failures'}")
+          f"wire={args.wire_dtype or 'f32'}, scenario={scenario} "
+          f"(drop={cfg.drop_prob}, delay<= {cfg.delay_max_cycles} cycles, "
+          f"online={cfg.online_fraction:.0%})")
     t0 = time.time()
     res = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:],
                          cycles=args.cycles,
@@ -71,6 +87,18 @@ def main() -> None:
           f"{res.delivered_total:,} delivered, {res.lost_total:,} lost)")
     print(f"bandwidth: {res.wire_bytes_total / 1e9:.3f} GB on the wire, "
           f"in-flight payload buffer {res.buf_payload_bytes / 1e6:.1f} MB")
+
+    # compaction observability: what the router saw, what the engine chose
+    dpc = np.asarray(res.delivered_per_cycle, dtype=np.float64)
+    comp = res.compaction
+    modes = comp.get("chunk_modes", {})
+    print(f"delivered/cycle: mean {dpc.mean():,.0f}, max {dpc.max():,.0f} "
+          f"({dpc.mean() / n:.2%} of the population)")
+    print("chunk packing: "
+          + ", ".join(f"{k}={v}" for k, v in modes.items() if v)
+          + f"; round-1 occupancy mean {comp['round1_occupancy_mean']:.2%} "
+          f"max {comp['round1_occupancy_max']:.2%}, multi-receive mean "
+          f"{comp['multi_occupancy_mean']:.2%}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@ data (Pegasos SVM / Adaline), one data record per peer.
 These are not transformer configs; they parameterize ``repro.core`` — the
 gossip protocol simulator and the on-mesh gossip runtime. Registered here so
 ``--arch gossip-linear-<dataset>`` selects the paper's exact experimental
-setups (Table I)."""
+setups (Table I). ``FAILURE_SCENARIOS`` names the shared failure operating
+points (clean / the paper's extreme / the sparse-delivery regimes of
+Fig. 5–7) used by the benchmarks and examples."""
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -91,3 +94,33 @@ MALICIOUS_URLS = GossipLinearConfig("malicious-urls", dim=10, n_nodes=10_000,
                                     n_test=2000, class_ratio=(7921, 16039))
 
 DATASETS = {c.name: c for c in (REUTERS, SPAMBASE, MALICIOUS_URLS)}
+
+
+# Named failure operating points (Section VI-A and the sparse-delivery
+# regimes of Fig. 5-7, where only a few percent of the population receives
+# per cycle): "extreme" is the paper's hardest published scenario; the
+# "sparse-*" family crosses low online fractions with high drop under the
+# 10Δ delay — the regimes the sharded engine's compact_all path targets.
+FAILURE_SCENARIOS = {
+    "clean": dict(drop_prob=0.0, delay_max_cycles=1, online_fraction=1.0),
+    "extreme": dict(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9),
+    "sparse-d0.5-o0.3": dict(drop_prob=0.5, delay_max_cycles=10,
+                             online_fraction=0.3),
+    "sparse-d0.5-o0.1": dict(drop_prob=0.5, delay_max_cycles=10,
+                             online_fraction=0.1),
+    "sparse-d0.8-o0.3": dict(drop_prob=0.8, delay_max_cycles=10,
+                             online_fraction=0.3),
+    "sparse-d0.8-o0.1": dict(drop_prob=0.8, delay_max_cycles=10,
+                             online_fraction=0.1),
+}
+
+
+def with_failure_scenario(cfg: GossipLinearConfig,
+                          scenario: str) -> GossipLinearConfig:
+    """A copy of ``cfg`` with the named failure operating point applied."""
+    try:
+        return dataclasses.replace(cfg, **FAILURE_SCENARIOS[scenario])
+    except KeyError:
+        raise ValueError(f"unknown failure scenario {scenario!r} "
+                         f"(expected one of {sorted(FAILURE_SCENARIOS)})"
+                         ) from None

@@ -111,7 +111,81 @@ def wire_overhead_bytes(name) -> int:
     return 4 if is_quantized_wire(name) else 0
 
 
-def quantize_wire(w, name, key=None):
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32 block cipher on uint32 arrays — op-for-op the unrolled
+    lowering of JAX's ``threefry2x32_p`` (jax._src.prng), so the bits are
+    identical to what ``jax.random`` produces for the same key/counters.
+    Pure jnp integer ops: usable under jit, inside ``lax.scan`` bodies and
+    inside Pallas kernels alike."""
+    def rotl(v, r):
+        return (v << jnp.uint32(r)) | (v >> jnp.uint32(32 - r))
+
+    rot = ((13, 15, 26, 6), (17, 29, 16, 24))
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(0x1BD11BDA))
+    x = [x0 + ks[0], x1 + ks[1]]
+    for i in range(5):
+        for r in rot[i % 2]:
+            x[0] = x[0] + x[1]
+            x[1] = rotl(x[1], r)
+            x[1] = x[0] ^ x[1]
+        x[0] = x[0] + ks[(i + 1) % 3]
+        x[1] = x[1] + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x[0], x[1]
+
+
+def uniform_at(k0, k1, p, size: int):
+    """``jax.random.uniform(key, shape)`` evaluated at flat positions ``p``
+    of an array with ``size`` total elements.
+
+    Reproduces the original (non-partitionable) threefry counter scheme of
+    ``jax._src.prng._threefry_random_bits_original`` bit for bit: the iota
+    counter array of ``size`` elements is split in half (odd sizes pad one
+    zero), element p < half is lane 0 of the block (p, half+p), element
+    p >= half is lane 1 of the block (p-half, p) — each element evaluates
+    exactly one 20-round block, with no cross-lane communication. The
+    uint32 bits map to [0, 1) floats with the same mantissa-fill transform
+    ``jax.random.uniform`` applies.
+
+    This is what lets both the Pallas send kernel and the compacted
+    send path regenerate the "int8_sr" noise for an arbitrary *subset* of
+    messages without a dense (N, d) draw, bitwise-equal to the full-array
+    ``jax.random.uniform`` the reference engine consumes."""
+    if jax.config.jax_threefry_partitionable:
+        # the partitionable PRNG uses a different counter scheme: this
+        # helper would silently diverge from jax.random.uniform and break
+        # the engines' bitwise int8_sr parity contract — fail loudly
+        # instead (supporting it means implementing the partitionable
+        # scheme here AND in the Pallas send kernel, both parity-tested)
+        raise NotImplementedError(
+            "uniform_at implements the original (non-partitionable) "
+            "threefry counter scheme; run with "
+            "jax_threefry_partitionable=False for the int8_sr wire dtype")
+    half = (size + 1) // 2
+    is_lo = p < half
+    pair = p + half
+    x0 = jnp.where(is_lo, p, p - half)
+    # the odd-size zero pad sits at padded position `size`
+    x1 = jnp.where(is_lo, jnp.where(pair < size, pair, 0), p)
+    y0, y1 = threefry2x32(k0, k1, x0.astype(jnp.uint32),
+                          x1.astype(jnp.uint32))
+    bits = jnp.where(is_lo, y0, y1)
+    fbits = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return jax.lax.bitcast_convert_type(fbits, jnp.float32) - 1.0
+
+
+def sr_noise_for_rows(key, rows, d: int, n_total: int):
+    """The ``jax.random.uniform(key, (n_total, d))`` noise of a full-array
+    "int8_sr" quantization, evaluated only at the given ``rows``:
+    ``sr_noise_for_rows(key, rows, d, n)`` ==
+    ``jax.random.uniform(key, (n, d))[rows]`` bitwise, at O(len(rows)·d)
+    threefry work. ``key`` is a typed threefry key (the per-cycle
+    ``k_recv`` slot)."""
+    kd = jax.random.key_data(key).astype(jnp.uint32)
+    p = rows[:, None] * d + jnp.arange(d, dtype=rows.dtype)[None, :]
+    return uniform_at(kd[0], kd[1], p, n_total * d)
+
+
+def quantize_wire(w, name, key=None, noise=None):
     """Per-message affine int8 quantization of a batch of models.
 
     ``w``: (..., d) f32 — each slice along the last axis is one transmitted
@@ -133,6 +207,10 @@ def quantize_wire(w, name, key=None):
     uniform [0, 1) noise before the floor — ``key`` (threefry) is required
     and makes the draw reproducible: both simulator engines feed the same
     per-cycle ``k_recv`` key here, keeping cross-engine parity bitwise.
+    ``noise`` (optional, "int8_sr" only) supplies the uniform draw directly
+    instead of ``key`` — the compacted send path passes
+    :func:`sr_noise_for_rows` values so a subset quantization consumes
+    exactly the noise the full-array draw would have given those rows.
 
     Precondition: coefficients are expected inside the f16-representable
     range (|w| ≲ 6.5e4 — far beyond any non-divergent linear model here;
@@ -153,9 +231,11 @@ def quantize_wire(w, name, key=None):
     sf = jnp.where(scale > 0, scale, jnp.float16(1)).astype(jnp.float32)
     u = (w - zpf[..., None]) / sf[..., None]
     if name == "int8_sr":
-        if key is None:
-            raise ValueError("int8_sr quantization needs a PRNG key")
-        u = jnp.floor(u + jax.random.uniform(key, w.shape))
+        if noise is None:
+            if key is None:
+                raise ValueError("int8_sr quantization needs a PRNG key")
+            noise = jax.random.uniform(key, w.shape)
+        u = jnp.floor(u + noise)
     else:
         u = jnp.round(u)
     q = jnp.clip(u, -127, 127).astype(jnp.int8)

@@ -30,14 +30,17 @@ network:
   Pallas ``kernels/gossip_cycle.py`` kernel: deliver→merge→update→
   cache-write in one VMEM-resident pass per node block (interpret mode on
   CPU for the parity tests).
-* **compacted multi-receive rounds** — the first winner round touches most
-  nodes and stays dense, but rounds ≥ 2 touch only the multi-receivers
-  (~a quarter of the population in the extreme scenario, and winner rounds
-  nest: round-k receivers ⊆ round-(k-1) receivers). The router emits capped
-  compacted index lists and the data plane gathers / applies the remaining
-  chain / scatters back just those nodes, so K-round apply cost tracks the
-  delivered-message count instead of K·N (dense fallback per chunk when the
-  multi round is near-full).
+* **delivery-proportional compacted rounds** — winner rounds nest
+  (round-k receivers ⊆ round-(k-1) receivers), so the router's per-cycle
+  receiver lists bound the real work. Per chunk the driver picks the
+  cheapest packing from the observed occupancy: ``dense`` (K rounds over
+  all N), ``compact`` (round 1 dense, rounds ≥ 2 gathered/applied/
+  scattered over the multi-receivers — ~a quarter of the population in the
+  extreme scenario) or ``compact_all`` (every round over the round-1
+  receiver subset — in sparse-delivery regimes a few percent of N, the
+  regime of the paper's Fig. 5–7). Under a node mesh the tables are packed
+  per shard, so the compact paths run inside ``shard_map`` too; the dense
+  fallback is kept for near-full subsets.
 * **wire-dtype payloads** — ``cfg.wire_dtype="bf16"/"f16"/"int8"/
   "int8_sr"`` stores the in-flight ``buf_w`` (the engine's dominant memory:
   ``(D, N, d)``) in the wire dtype; messages are quantized at send time and
@@ -46,6 +49,9 @@ network:
   scale/zero-point lanes (``buf_scale``/``buf_zp``) and dequantize at
   delivery — in-kernel for the Pallas path; "int8_sr" rounds stochastically
   with the same per-cycle ``k_recv`` threefry slot as the reference engine.
+  With ``use_send_kernel`` the send-side quantization itself runs as the
+  fused Pallas ``quantize_send`` kernel (in-kernel threefry for the SR
+  draw), closing the last full-population f32 pass per cycle.
   ``SimResult`` reports ``wire_bytes_total``/``buf_payload_bytes``.
 
 Determinism contract: for a given seed the engine consumes the *same* host
@@ -71,7 +77,8 @@ from repro.core import peer_sampling
 from repro.core.cache import ModelCache
 from repro.core.gossip_optimizer import (dequantize_wire, is_quantized_wire,
                                          is_stochastic_wire, quantize_wire,
-                                         resolve_wire_dtype)
+                                         resolve_wire_dtype,
+                                         sr_noise_for_rows)
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
 from repro.core.simulation import (SimResult, _eval, eval_points,
@@ -130,7 +137,7 @@ def _draw_chunk(keys, onlines, clock0, *, n: int, drop: float,
 
 class _HostRouter:
     """Host-side control-plane state: which flat buffer slot holds a message
-    for which destination, bucketed by arrival cycle.
+    for which destination, carried between chunks as flat pending arrays.
 
     The router is the "control plane" half of the engine split (diagrammed
     in docs/ARCHITECTURE.md): routing is *payload-independent* — it depends
@@ -140,17 +147,19 @@ class _HostRouter:
     (f32 through int8_sr) sees the identical delivery schedule, which the
     accounting tests pin via ``sent_total`` equality across dtypes.
 
-    ``pending[a]`` collects the flat slot ids (row*n + sender) of messages
-    arriving at cycle ``a``; ``dst[row]`` mirrors the destination lane of
-    the device buffer. Bucketing at send time means delivery never scans
-    the full (D·N) buffer — per cycle the router touches only the ~N
-    messages actually due."""
+    The pending set is three parallel int32 arrays — flat slot id
+    (row*n + sender), destination, absolute arrival cycle — snapshotted at
+    send time. Storing the destination with the message (instead of reading
+    the buffer's dst lane at delivery, as the device-side oracle does) is
+    equivalent: the slot row a message occupies is provably not overwritten
+    before its arrival cycle's deliveries run."""
 
     def __init__(self, n: int, delay_max: int):
         self.n = n
         self.delay_max = delay_max
-        self.dst = np.zeros((delay_max, n), np.int32)
-        self.pending: dict = {}
+        self.p_slot = _EMPTY_I32
+        self.p_dst = _EMPTY_I32
+        self.p_arr = _EMPTY_I32
 
     def route_chunk(self, dsts, arrivals, online_rows, clock0: int,
                     k_rounds: int):
@@ -158,101 +167,217 @@ class _HostRouter:
 
         Reproduces ``select_receivers``'s semantics exactly: in round k a
         node accepts the due message with the k-th largest flat slot id.
-        The K scatter-max rounds become K numpy fancy-index assignments
-        (ascending index order => last write wins => max slot id), which
-        run at memcpy-like speed instead of XLA:CPU's serial scatters.
+        The whole chunk is resolved in ONE batched numpy pass (no per-cycle
+        Python loop): every candidate message arriving inside the chunk is
+        ranked within its (cycle, destination) group by descending flat
+        slot id — one lexsort — and rank r < K receives in round r.
+        Distinct candidates in a group never share a slot id (a slot row is
+        delivered before it is reused), so the ranking is total.
 
-        Returns ``(src_slot, stats, multi)``: ``src_slot`` (T, K, n) int32
-        with -1 marking "no receive this round" (the data plane derives the
-        valid mask from the sign, so only one integer table crosses to the
-        device), and ``multi`` — one int32 array per cycle listing the nodes
-        that receive in round 2 or later (ascending). Winner rounds fill in
-        order, so round-k receivers are a subset of round-(k-1) receivers:
-        ``multi[t]`` indexes *every* receive beyond round 1, which is what
-        the compacted data-plane path gathers/scatters."""
+        Returns ``(win, stats, multi, recv)``:
+
+        * ``win`` — the winner tuple ``(t, round, dst, slot)`` of parallel
+          int32 arrays, ascending in (t, dst). The router deliberately does
+          NOT materialize the dense (T, K, n) table: at N=10^6 that is a
+          ~320 MB memset per chunk, pure waste whenever a compact packing
+          is chosen. ``dense_table``/``pack_compact_rounds``/
+          ``pack_compact_all`` build exactly the representation the chosen
+          chunk fn consumes;
+        * ``stats`` — the chunk message economy, plus ``delivered_cycles``
+          (T,) per-cycle delivered counts for ``SimResult`` observability;
+        * ``multi`` — one ascending int32 array per cycle listing the nodes
+          that receive in round 2 or later (winner rounds fill in order, so
+          round-k receivers ⊆ round-(k-1) receivers);
+        * ``recv`` — one ascending int32 array per cycle listing ALL
+          receiving nodes (the round-1 winners), which is what the fully
+          compacted data-plane path gathers/scatters in sparse-delivery
+          regimes."""
         T, n = dsts.shape
         D, K = self.delay_max, k_rounds
-        src_slot = np.full((T, K, n), -1, np.int32)
-        multi = [_EMPTY_I32] * T
-        sent = delivered = lost = overflow = 0
-        flat_dst = self.dst.reshape(-1)
 
-        for t in range(T):
-            clock = clock0 + t
-            due = self.pending.pop(clock, [])
-            if due:
-                # ascending flat slot id => fancy-assign keeps the max
-                cand = np.sort(np.concatenate(due))
-                dst_c = flat_dst[cand]
-                on = online_rows[t][dst_c]
-                lost += int(cand.size - on.sum())
-                rem = cand[on]
-                rem_dst = dst_c[on]
-                for k in range(K):
-                    if rem.size == 0:
-                        break
-                    win = src_slot[t, k]
-                    win[rem_dst] = rem            # last (= max sid) wins
-                    delivered += int((win >= 0).sum())
-                    keep = win[rem_dst] != rem    # not this round's winner
-                    rem = rem[keep]
-                    rem_dst = rem_dst[keep]
-                overflow += int(rem.size)
-                if K > 1:
-                    multi[t] = np.flatnonzero(
-                        src_slot[t, 1] >= 0).astype(np.int32)
-            # sends happen after deliveries: overwrite this cycle's slot row
-            row = clock % D
-            self.dst[row] = dsts[t]
-            arr = arrivals[t]
-            base = row * n
-            sel = np.flatnonzero(arr >= 0)        # one pass over the sends
-            sent += int(sel.size)
-            if sel.size:
-                # stable sort groups by arrival cycle, ascending sender
-                # index within each group (ascending flat slot id)
-                order = np.argsort(arr[sel], kind="stable")
-                sorted_arr = arr[sel][order]
-                sorted_idx = sel[order]
-                edges = np.searchsorted(
-                    sorted_arr, np.arange(clock + 1, clock + D + 2))
-                for j in range(D):
-                    lo, hi = edges[j], edges[j + 1]
-                    if hi > lo:
-                        self.pending.setdefault(clock + 1 + j, []).append(
-                            (base + sorted_idx[lo:hi]).astype(np.int32))
+        # sends of this chunk -> (slot, dst, arrival) triples, merged with
+        # the pending carry; arrivals beyond the chunk become the new carry
+        t_send, senders = np.nonzero(arrivals >= 0)
+        slot = (((clock0 + t_send) % D) * n + senders).astype(np.int32)
+        sent = int(senders.size)
+        cand_slot = np.concatenate([self.p_slot, slot])
+        cand_dst = np.concatenate([self.p_dst,
+                                   dsts[t_send, senders].astype(np.int32)])
+        cand_arr = np.concatenate([self.p_arr,
+                                   arrivals[t_send, senders].astype(np.int32)])
+        future = cand_arr >= clock0 + T
+        self.p_slot = cand_slot[future]
+        self.p_dst = cand_dst[future]
+        self.p_arr = cand_arr[future]
+        due = ~future
+        c_slot = cand_slot[due]
+        c_dst = cand_dst[due]
+        c_t = cand_arr[due] - clock0
 
+        # a message due while its destination is offline leaves the system
+        on = online_rows[c_t, c_dst]
+        lost = int(c_slot.size - int(on.sum()))
+        c_slot, c_dst, c_t = c_slot[on], c_dst[on], c_t[on]
+
+        # winner ranks: sort by (cycle, dst) group, ascending slot id inside
+        # each group => rank-from-group-end r is the r-th largest slot id
+        group = c_t.astype(np.int64) * n + c_dst
+        order = np.lexsort((c_slot, group))
+        g_s = group[order]
+        slot_s = c_slot[order]
+        t_s = c_t[order]
+        dst_s = c_dst[order]
+        rank = np.searchsorted(g_s, g_s, side="right") - 1 \
+            - np.arange(g_s.size)
+        wm = rank < K
+        win = (t_s[wm].astype(np.int32), rank[wm].astype(np.int32),
+               dst_s[wm], slot_s[wm])
+        delivered = int(wm.sum())
+        overflow = int(g_s.size - delivered)
+
+        def per_cycle(mask):
+            # group order is (cycle, dst) ascending => each selected list is
+            # ascending in node id; split at the cycle boundaries
+            tm, dm = t_s[mask], dst_s[mask]
+            return [a.astype(np.int32, copy=False) for a in
+                    np.split(dm, np.searchsorted(tm, np.arange(1, T)))]
+
+        recv = per_cycle(rank == 0)               # every receiver (round 1)
+        multi = per_cycle(rank == 1) if K > 1 else [_EMPTY_I32] * T
         stats = dict(sent=sent, delivered=delivered, lost=lost,
-                     overflow=overflow)
-        return src_slot, stats, multi
+                     overflow=overflow,
+                     delivered_cycles=np.bincount(
+                         win[0], minlength=T).astype(np.int64))
+        return win, stats, multi, recv
 
 
 _EMPTY_I32 = np.empty(0, np.int32)
 
 
-def pack_compact_rounds(src_slot: np.ndarray, multi, width: int):
-    """Compact the dense (T, K, n) routing table for rounds >= 2.
+def shard_list_width(lists, n: int, shards: int) -> int:
+    """Smallest per-shard width that fits every per-cycle index list.
+
+    With ``shards == 1`` this is just the longest list. With a node mesh the
+    compacted tables must stay node-sharded, so receivers are packed
+    per shard of the node axis (shard s owns nodes [s*n/S, (s+1)*n/S)) and
+    the width is the largest per-shard receiver count over the chunk."""
+    if shards == 1:
+        return max((r.size for r in lists), default=0)
+    bounds = np.arange(1, shards) * (n // shards)
+    w = 0
+    for r in lists:
+        if r.size:
+            w = max(w, int(np.max(np.diff(np.searchsorted(
+                r, np.concatenate([[0], bounds, [n]]))))))
+    return w
+
+
+def _pack_index_lists(lists, n: int, width: int, shards: int):
+    """(T,) ascending index lists -> (T, shards*width) int32, -1 padded.
+
+    Shard s's entries land in columns [s*width, (s+1)*width): under a node
+    mesh the packed axis is sharded like the node axis, and each device's
+    slice references only its own nodes — the gather/apply/scatter of the
+    compact path stays shard-local."""
+    T = len(lists)
+    ridx = np.full((T, shards * width), -1, np.int32)
+    if shards == 1:
+        for t, r in enumerate(lists):
+            ridx[t, :r.size] = r
+        return ridx
+    bounds = np.arange(1, shards) * (n // shards)
+    for t, r in enumerate(lists):
+        cuts = np.searchsorted(r, np.concatenate([[0], bounds, [n]]))
+        for s in range(shards):
+            seg = r[cuts[s]:cuts[s + 1]]
+            ridx[t, s * width:s * width + seg.size] = seg
+    return ridx
+
+
+def dense_table(win, T: int, K: int, n: int) -> np.ndarray:
+    """The dense (T, K, n) routing table from a winner tuple: entry
+    [t, r, dst] holds the flat slot id of dst's round-r receive at cycle
+    t, -1 = no receive. Built only when the dense chunk fn actually runs —
+    at N=10^6 this is the router's single biggest allocation."""
+    t_w, r_w, dst_w, slot_w = win
+    src_slot = np.full((T, K, n), -1, np.int32)
+    src_slot[t_w, r_w, dst_w] = slot_w
+    return src_slot
+
+
+def _packed_columns(lists, t_w, dst_w, n: int, width: int, shards: int):
+    """Packed-table column of each winner: the position of ``dst_w[i]``
+    inside its cycle's (shard-grouped) index list. ``t_w`` must be
+    ascending; every dst must be present in its cycle's list (winner
+    rounds nest, so receiver lists cover all deeper rounds)."""
+    cols = np.empty(t_w.size, np.int64)
+    bounds = np.searchsorted(t_w, np.arange(len(lists) + 1))
+    shard_size = n // shards
+    for t, r in enumerate(lists):
+        lo, hi = bounds[t], bounds[t + 1]
+        if hi == lo:
+            continue
+        d = dst_w[lo:hi]
+        pos = np.searchsorted(r, d)
+        if shards == 1:
+            cols[lo:hi] = pos
+        else:
+            s = d // shard_size
+            cuts = np.searchsorted(r, np.arange(shards) * shard_size)
+            cols[lo:hi] = s * width + (pos - cuts[s])
+    return cols
+
+
+def pack_compact_rounds(win, multi, T: int, K: int, n: int, width: int,
+                        shards: int = 1):
+    """Compact the routing of rounds >= 2 (round 1 stays dense).
 
     Rounds beyond the first touch only the ``multi`` nodes (about a quarter
     of the population in the paper's extreme scenario) — the dense table
-    makes the data plane compute them over all N anyway. This packs them
-    into fixed-width tables the scan can gather/scatter:
+    makes the data plane compute them over all N anyway. This builds:
 
     * ``src0``  (T, n)        round-1 slots (dense — most nodes receive);
-    * ``ridx``  (T, M)        receiver node ids, -1 padded;
-    * ``rslot`` (T, K-1, M)   per-round slots for those nodes, -1 = none.
+    * ``ridx``  (T, S*M)      receiver node ids, -1 padded, grouped by node
+                              shard (S = ``shards``) so meshes stay local;
+    * ``rslot`` (T, K-1, S*M) per-round slots for those nodes, -1 = none.
 
-    ``width`` caps M; the caller buckets it (powers of two) so the jitted
-    chunk fn recompiles O(log n) times, and falls back to the dense table
-    when a round is near-full (see ``run_sharded_simulation``)."""
-    T, K, n = src_slot.shape
-    ridx = np.full((T, width), -1, np.int32)
-    rslot = np.full((T, K - 1, width), -1, np.int32)
-    for t, r in enumerate(multi):
-        ridx[t, :r.size] = r
-        if r.size:
-            rslot[t, :, :r.size] = src_slot[t, 1:, r].T
-    return src_slot[:, 0], ridx, rslot
+    ``width`` caps the per-shard M; the caller buckets it (powers of two)
+    so the jitted chunk fn recompiles O(log n) times, and falls back to the
+    dense table when a round is near-full (see ``run_sharded_simulation``)."""
+    t_w, r_w, dst_w, slot_w = win
+    m0 = r_w == 0
+    src0 = np.full((T, n), -1, np.int32)
+    src0[t_w[m0], dst_w[m0]] = slot_w[m0]
+    ridx = _pack_index_lists(multi, n, width, shards)
+    rslot = np.full((T, K - 1, ridx.shape[1]), -1, np.int32)
+    mk = ~m0
+    cols = _packed_columns(multi, t_w[mk], dst_w[mk], n, width, shards)
+    rslot[t_w[mk], r_w[mk] - 1, cols] = slot_w[mk]
+    return src0, ridx, rslot
+
+
+def pack_compact_all(win, recv, T: int, K: int, n: int, width: int,
+                     shards: int = 1):
+    """Compact ALL receive rounds over the round-1 receiver set.
+
+    In sparse-delivery regimes (high drop, low online fraction, long
+    delays) even round 1 touches only a few percent of the population —
+    the ``compact`` packing still pays a dense O(N) round-1 apply. Winner
+    rounds nest, so the round-1 receiver list ``recv`` covers every round;
+    this packs the full K-round chain for just those nodes:
+
+    * ``ridx``  (T, S*M)     receiving node ids, -1 padded, shard-grouped;
+    * ``rslot`` (T, K, S*M)  per-round slots for those nodes, -1 = none.
+
+    The data plane gathers the subset state, runs the same K-round apply
+    the dense path runs on all N, and scatters back — per-cycle apply cost
+    tracks delivered messages instead of population size."""
+    t_w, r_w, dst_w, slot_w = win
+    ridx = _pack_index_lists(recv, n, width, shards)
+    rslot = np.full((T, K, ridx.shape[1]), -1, np.int32)
+    cols = _packed_columns(recv, t_w, dst_w, n, width, shards)
+    rslot[t_w, r_w, cols] = slot_w
+    return ridx, rslot
 
 
 # ---------------------------------------------------------------------------
@@ -384,8 +509,8 @@ def _shard_apply(base_apply, mesh, axis: str):
 @functools.lru_cache(maxsize=64)
 def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     delay_max: int, use_pallas: bool, interpret: bool,
-                    mesh, axis: Optional[str], compact: bool,
-                    wire: Optional[str]):
+                    mesh, axis: Optional[str], mode: str,
+                    wire: Optional[str], use_send_kernel: bool):
     """Jitted data-plane chunk runner, cached per configuration.
 
     Caching the jitted callable (rather than rebuilding the closure per
@@ -393,11 +518,23 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     runs — a benchmark sweep compiles each (chunk-length, N) combination
     once, not once per call.
 
-    ``compact`` selects the compacted multi-receive path: round 1 is applied
-    densely (most receiving nodes receive exactly once), rounds >= 2 run
-    only on the gathered multi-receiver subset and scatter back — the
-    K-round apply cost tracks the delivered-message count instead of K·N.
-    Requires the plain ``_vector_apply`` (no mesh sharding, no Pallas).
+    ``mode`` selects the receive-apply packing (chosen per chunk by the
+    driver from the router's observed occupancy — see
+    ``run_sharded_simulation``):
+
+    * ``"dense"``       — the (T, K, n) table, K-round apply over all N;
+    * ``"compact"``     — round 1 dense, rounds >= 2 gathered/applied/
+                          scattered over the multi-receiver subset;
+    * ``"compact_all"`` — ALL rounds over the gathered round-1 receiver
+                          subset: per-cycle apply cost tracks delivered
+                          messages, the sparse-delivery hot path.
+
+    Both compact modes run under a node mesh too: the router packs the
+    subset tables per node shard (``pack_compact_rounds``/
+    ``pack_compact_all`` with ``shards`` = mesh axis size), so the packed
+    axis shards like the node axis and the subset apply stays inside
+    ``shard_map``. Only the Pallas *receive* kernel still requires the
+    dense table (its grid covers all node blocks).
 
     ``wire`` is the wire-dtype name. The affine int8 dtypes quantize at
     send (per-message f16 scale/zero-point written into the buf_scale/
@@ -405,16 +542,22 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     the jnp paths, in VMEM for the Pallas kernel. "int8_sr" derives its
     per-cycle stochastic-rounding key from the scanned key stream exactly
     like the reference engine's ``k_recv`` (first slot of the 4-way split),
-    so cross-engine parity stays bitwise."""
+    so cross-engine parity stays bitwise. ``use_send_kernel`` routes the
+    send-side quantization through the fused Pallas
+    ``quantize_send`` kernel (in-kernel threefry for the SR draw) instead
+    of the jnp ``quantize_wire`` ops — bitwise-identical by contract."""
     update = make_update(learner, lam=lam, eta=eta)
     apply_fn = _pallas_apply(lam, interpret) if use_pallas else _vector_apply
     if mesh is not None and axis is not None:
         apply_fn = _shard_apply(apply_fn, mesh, axis)
-    if compact and (use_pallas or mesh is not None):
-        raise ValueError("compacted rounds require the plain vector apply")
+    if mode != "dense" and use_pallas:
+        raise ValueError("compacted rounds require the vector apply "
+                         "(the Pallas receive kernel is dense)")
     D = delay_max
     quantized = is_quantized_wire(wire)
     stochastic = is_stochastic_wire(wire)
+    if use_send_kernel:
+        from repro.kernels.gossip_cycle import quantize_send
 
     def chunk_fn(carry, tables, keydata, X, y, X_test, y_test, eval_idx):
         def records(clock):
@@ -445,7 +588,14 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             if stochastic:
                 # k_recv: slot 0 of the reference engine's per-cycle split
                 key = jax.random.split(jax.random.wrap_key_data(kd), 4)[0]
-            q, sc, zp = quantize_wire(fresh_w, wire, key=key)
+            if use_send_kernel:
+                q, sc, zp = quantize_send(
+                    fresh_w, wire,
+                    key_data=(jax.random.key_data(key) if stochastic
+                              else None),
+                    interpret=interpret)
+            else:
+                q, sc, zp = quantize_wire(fresh_w, wire, key=key)
             return (buf_w.at[clock % D].set(q),
                     buf_scale.at[clock % D].set(sc),
                     buf_zp.at[clock % D].set(zp))
@@ -471,6 +621,38 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
                     clock + 1), None
 
+        def subset_apply(state, ridx, rslot, Xc, yc, buf_w, buf_scale,
+                         buf_zp, flat_t):
+            """Gather the ``ridx`` subset, run the (K', W)-round chain on
+            it, scatter back — the shared core of both compact modes. Work
+            tracks the packed width, not N; padding (-1) gathers node 0
+            with an all-False valid mask and scatters out of bounds
+            (dropped), so it is inert."""
+            last_w, last_t, fresh_w, fresh_t, cache = state
+            n, d = last_w.shape
+            pad = ridx < 0
+            gi = jnp.maximum(ridx, 0)
+            vc = (rslot >= 0) & (~pad)[None, :]
+            sc = jnp.maximum(rslot, 0)
+            sub = ModelCache(cache.w[gi], cache.t[gi], cache.ptr[gi],
+                             cache.count[gi])
+            msg_w, _ = gather(buf_w, buf_scale, buf_zp, sc, d)
+            lw2, lt2, fw2, ft2, sub2 = apply_fn(
+                last_w[gi], last_t[gi], fresh_w[gi], fresh_t[gi], sub,
+                msg_w, flat_t[sc], vc, Xc[gi], yc[gi],
+                variant=variant, update=update)
+            si = jnp.where(pad, n, gi)        # out of bounds => dropped
+            last_w = last_w.at[si].set(lw2, mode="drop")
+            last_t = last_t.at[si].set(lt2, mode="drop")
+            fresh_w = fresh_w.at[si].set(fw2, mode="drop")
+            fresh_t = fresh_t.at[si].set(ft2, mode="drop")
+            cache = ModelCache(cache.w.at[si].set(sub2.w, mode="drop"),
+                               cache.t.at[si].set(sub2.t, mode="drop"),
+                               cache.ptr.at[si].set(sub2.ptr, mode="drop"),
+                               cache.count.at[si].set(sub2.count,
+                                                      mode="drop"))
+            return last_w, last_t, fresh_w, fresh_t, cache
+
         def compact_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
              buf_w, buf_t, buf_scale, buf_zp, clock) = carry
@@ -486,29 +668,11 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                 ModelCache(cw, ct, ptr, cnt), msg_w0,
                 flat_t[i0][None], (src0 >= 0)[None], Xc, yc,
                 variant=variant, update=update)
-            # rounds >= 2: gather the multi-receiver subset, continue the
-            # chain (their lastModel already holds the round-1 message),
-            # scatter back — work tracks delivered messages, not K·N
-            pad = ridx < 0
-            gi = jnp.maximum(ridx, 0)
-            vc = (rslot >= 0) & (~pad)[None, :]
-            sc = jnp.maximum(rslot, 0)
-            sub = ModelCache(cache.w[gi], cache.t[gi], cache.ptr[gi],
-                             cache.count[gi])
-            msg_w2, _ = gather(buf_w, buf_scale, buf_zp, sc, d)
-            lw2, lt2, fw2, ft2, sub2 = apply_fn(
-                last_w[gi], last_t[gi], fresh_w[gi], fresh_t[gi], sub,
-                msg_w2, flat_t[sc], vc, Xc[gi], yc[gi],
-                variant=variant, update=update)
-            si = jnp.where(pad, n, gi)        # out of bounds => dropped
-            last_w = last_w.at[si].set(lw2, mode="drop")
-            last_t = last_t.at[si].set(lt2, mode="drop")
-            fresh_w = fresh_w.at[si].set(fw2, mode="drop")
-            fresh_t = fresh_t.at[si].set(ft2, mode="drop")
-            cache = ModelCache(cache.w.at[si].set(sub2.w, mode="drop"),
-                               cache.t.at[si].set(sub2.t, mode="drop"),
-                               cache.ptr.at[si].set(sub2.ptr, mode="drop"),
-                               cache.count.at[si].set(sub2.count, mode="drop"))
+            # rounds >= 2: continue the chain on the multi-receiver subset
+            # (their lastModel already holds the round-1 message)
+            last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
+                (last_w, last_t, fresh_w, fresh_t, cache), ridx, rslot,
+                Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
             buf_w, buf_scale, buf_zp = send(buf_w, buf_scale, buf_zp,
                                             fresh_w, clock, kd)
             buf_t = buf_t.at[clock % D].set(fresh_t)
@@ -516,7 +680,62 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
                     clock + 1), None
 
-        body = compact_body if compact else dense_body
+        def send_compact(buf_w, buf_t, buf_scale, buf_zp, fresh_w, fresh_t,
+                         clock, kd, sidx):
+            """Refresh only the SENDERS' slots of this cycle's buffer row.
+
+            In sparse regimes most nodes are offline or drop their send;
+            their slots keep stale payloads that the router provably never
+            routes (only ``arrival >= 0`` messages enter the pending set),
+            so writing — and for int8, quantizing — just the ``sidx``
+            subset is exact. The "int8_sr" noise is regenerated at the
+            senders' positions (``sr_noise_for_rows``), bitwise-equal to
+            the dense ``jax.random.uniform`` draw at those rows."""
+            n, d = fresh_w.shape
+            pad = sidx < 0
+            gi = jnp.maximum(sidx, 0)
+            si = jnp.where(pad, n, gi)        # out of bounds => dropped
+            row = clock % D
+            sub_w = fresh_w[gi]
+            if not quantized:
+                buf_w = buf_w.at[row, si].set(
+                    sub_w.astype(buf_w.dtype), mode="drop")
+            else:
+                noise = None
+                if stochastic:
+                    key = jax.random.split(
+                        jax.random.wrap_key_data(kd), 4)[0]
+                    noise = sr_noise_for_rows(key, gi, d, n)
+                q, sc, zp = quantize_wire(sub_w, wire, noise=noise)
+                buf_w = buf_w.at[row, si].set(q, mode="drop")
+                buf_scale = buf_scale.at[row, si].set(sc, mode="drop")
+                buf_zp = buf_zp.at[row, si].set(zp, mode="drop")
+            buf_t = buf_t.at[row, si].set(fresh_t[gi], mode="drop")
+            return buf_w, buf_t, buf_scale, buf_zp
+
+        def compact_all_body(carry, inp):
+            (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
+             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
+            (ridx, rslot, sidx), kd = inp
+            Xc, yc = records(clock)
+            flat_t = buf_t.reshape(-1)
+            # every round over the round-1 receiver subset: non-receivers
+            # are never touched, so per-cycle apply cost is
+            # delivery-proportional (the sparse-delivery hot path) — and
+            # the send refresh is sender-proportional to match
+            last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
+                (last_w, last_t, fresh_w, fresh_t,
+                 ModelCache(cw, ct, ptr, cnt)), ridx, rslot,
+                Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
+            buf_w, buf_t, buf_scale, buf_zp = send_compact(
+                buf_w, buf_t, buf_scale, buf_zp, fresh_w, fresh_t, clock,
+                kd, sidx)
+            return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
+                    cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
+                    clock + 1), None
+
+        body = {"dense": dense_body, "compact": compact_body,
+                "compact_all": compact_all_body}[mode]
         carry, _ = lax.scan(body, carry, (tables, keydata))
         cache = ModelCache(carry[4], carry[5], carry[6], carry[7])
         errs = _eval(cache, eval_idx, X_test, y_test)
@@ -537,7 +756,10 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                            mesh=None, node_axis: Optional[str] = None,
                            use_pallas: Optional[bool] = None,
                            interpret: Optional[bool] = None,
-                           compact_rounds: Optional[bool] = None) -> SimResult:
+                           compact_rounds: Optional[bool] = None,
+                           compact_mode: Optional[str] = None,
+                           use_send_kernel: Optional[bool] = None
+                           ) -> SimResult:
     """Run the protocol with the sharded mega-population engine.
 
     ``mesh``: optional ``jax.sharding.Mesh``; the node axis is split over
@@ -545,17 +767,34 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     that axis size. ``use_pallas`` selects the fused cycle kernel (default:
     only on TPU; requires the Pegasos learner); ``interpret`` forces Pallas
     interpret mode (default: on for non-TPU backends, for CPU testing).
-    ``compact_rounds`` selects the compacted multi-receive path (rounds >= 2
-    gather/apply/scatter only the receiving nodes); default: on whenever the
-    plain vector apply runs (no mesh, no Pallas) and k_rounds > 1. A chunk
-    whose multi-receiver round is near-full (> N/2) falls back to the dense
-    table. ``cfg.wire_dtype`` ("bf16"/"f16"/"int8"/"int8_sr") stores the
+
+    ``compact_rounds`` allows the compacted receive paths (default: on
+    whenever the vector apply runs, i.e. no Pallas — meshes included, via
+    per-shard packed tables). Per chunk the driver picks the cheapest of
+    three packings from the router's observed occupancy — ``"dense"``
+    (K rounds over all N), ``"compact"`` (round 1 dense, rounds >= 2 over
+    the multi-receiver subset) and ``"compact_all"`` (every round over the
+    round-1 receiver subset; in sparse-delivery regimes per-cycle apply
+    cost tracks delivered messages instead of N) — falling back to dense
+    when a subset is near-full (> N/2). ``compact_mode`` forces one packing
+    for every chunk (benchmarks pin the PR 3 behavior with
+    ``compact_mode="compact"``).
+
+    ``cfg.wire_dtype`` ("bf16"/"f16"/"int8"/"int8_sr") stores the
     in-flight payload buffer — the engine's dominant memory — in the wire
     dtype (the int8 dtypes add (D, N) f16 scale/zero-point lanes); merge
     math stays f32 and the identical quantization is applied by the
     reference engine, so cross-engine parity holds under quantization too,
     including the stochastic-rounding noise (both engines draw it from the
-    same per-cycle ``k_recv`` threefry slot)."""
+    same per-cycle ``k_recv`` threefry slot). ``use_send_kernel`` fuses the
+    send-side quantization into the Pallas ``quantize_send`` kernel
+    (default: with ``use_pallas`` on int8 wire dtypes, no mesh) — the
+    kernel reproduces ``quantize_wire`` bitwise, including the in-kernel
+    threefry draw of the "int8_sr" noise. Chunks running the
+    ``compact_all`` packing go one step further regardless of the flag:
+    they quantize only the sender subset (``sr_noise_for_rows`` keeps the
+    noise positionally identical), which strictly dominates a
+    full-population kernel pass."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
     wdt = resolve_wire_dtype(cfg.wire_dtype)
@@ -573,6 +812,7 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
 
     node_sharding = None
     axis = None
+    shards = 1
     if mesh is not None:
         axis = node_axis or mesh.axis_names[0]
         axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -582,17 +822,37 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                     f"sharded engine needs N divisible by the '{axis}' mesh "
                     f"axis ({n} % {axis_size} != 0)")
             node_sharding = NamedSharding(mesh, PS(axis))
+            shards = axis_size
         else:
             mesh = axis = None
 
     if compact_rounds is None:
-        compact_rounds = (mesh is None and not use_pallas)
-    compact_rounds = compact_rounds and k_rounds > 1  # K=1 has no rounds >= 2
+        compact_rounds = not use_pallas
+    if compact_mode is not None:
+        if compact_mode not in ("dense", "compact", "compact_all"):
+            raise ValueError(f"unknown compact_mode {compact_mode!r}")
+        if compact_mode == "compact" and k_rounds == 1:
+            raise ValueError("compact_mode='compact' needs k_rounds > 1 "
+                             "(there are no rounds >= 2 to compact)")
+        if compact_mode != "dense" and use_pallas:
+            raise ValueError("compacted rounds require the vector apply "
+                             "(the Pallas receive kernel is dense)")
+        compact_rounds = compact_mode != "dense"
+    quantized_wire = is_quantized_wire(cfg.wire_dtype)
+    if use_send_kernel is None:
+        use_send_kernel = use_pallas and quantized_wire and mesh is None
+    elif use_send_kernel:
+        if not quantized_wire:
+            raise ValueError("use_send_kernel needs an int8 wire dtype "
+                             "(float wire dtypes send a plain cast)")
+        if mesh is not None:
+            raise ValueError("the Pallas send kernel does not run under a "
+                             "node mesh")
 
-    def get_chunk_fn(compact: bool):
+    def get_chunk_fn(mode: str):
         return _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
-                               D, use_pallas, interpret, mesh, axis, compact,
-                               cfg.wire_dtype)
+                               D, use_pallas, interpret, mesh, axis, mode,
+                               cfg.wire_dtype, use_send_kernel)
 
     # data-plane carry: models + cache + payload lanes of the buffer (the
     # int8 wire dtypes add the (D, N) f16 scale/zero-point lanes; empty
@@ -642,34 +902,92 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     if prefetch:
         staged = [draw(lo, hi) for lo, hi in bounds]
 
-    # compacted-table width, sticky across chunks (monotone powers of two)
+    # compacted-table widths, sticky across chunks (monotone powers of two)
     # so the jitted chunk fn compiles O(log n) times per run, not per chunk
-    compact_width = 8
+    widths = {"compact": 8, "compact_all": 8, "send": 8}
+    mode_counts = {"dense": 0, "compact": 0, "compact_all": 0}
+    occ_recv: list = []
+    occ_multi: list = []
+
+    def bucket(kind: str, need: int) -> int:
+        w = widths[kind]
+        while w < need:
+            w *= 2
+        return w
 
     def route(i):
-        nonlocal compact_width
+        """Route chunk i and pick its packing from the observed occupancy.
+
+        Candidate per-cycle work estimates (in node-row units): dense =
+        K·N + N, compact = N + (K+1)·W_multi + N,
+        compact_all = (K+4)·W_recv + 5·W_send. The trailing terms charge
+        the send-side buffer refresh (dense row write for dense/compact,
+        sender-proportional scatter+quantize for compact_all); the +1/+4
+        constants charge the subset gather/scatter overhead, calibrated on
+        the 2-core bench container so the chooser declines compact_all
+        near ~5% occupancy, where the measured crossover sits
+        (BENCH_population_scaling.json ``derived`` rows). Estimates use
+        the sticky bucketed widths so the choice matches what would
+        actually compile; a subset over N/2 disqualifies its packing (the
+        dense fallback of PR 2, now per mode)."""
         lo, hi = bounds[i]
         if prefetch:
             dn, an = staged[i]
             staged[i] = None          # satellite fix: bound prefetch memory
         else:
             dn, an = draw(lo, hi)
-        src_slot, stats, multi = router.route_chunk(
+        win, stats, multi, recv = router.route_chunk(
             dn, an, online_mat[lo:hi], lo, k_rounds)
-        m_raw = max((r.size for r in multi), default=0)
-        if compact_rounds and m_raw <= n // 2:
-            while compact_width < m_raw:
-                compact_width *= 2
-            return True, pack_compact_rounds(src_slot, multi,
-                                             compact_width), stats
-        return False, (src_slot,), stats
+        stats["recv_sizes"] = np.array([r.size for r in recv], np.int64)
+        stats["multi_sizes"] = np.array([r.size for r in multi], np.int64)
+        T = hi - lo
+
+        # sender lists cost T flatnonzero passes over (T, N) — build them
+        # only when a compact_all packing is actually on the table
+        sender_cache: list = []
+
+        def senders():
+            if not sender_cache:
+                sender_cache.append([np.flatnonzero(an[t] >= 0)
+                                     .astype(np.int32) for t in range(T)])
+            return sender_cache[0]
+
+        cand = {"dense": k_rounds * n + n}
+        wm = w1 = ws = None
+        if compact_rounds:
+            wm = bucket("compact", shard_list_width(multi, n, shards))
+            w1 = bucket("compact_all", shard_list_width(recv, n, shards))
+            if k_rounds > 1 and int(stats["multi_sizes"].max(initial=0)) \
+                    <= n // 2:
+                cand["compact"] = n + (k_rounds + 1) * shards * wm + n
+            if int(stats["recv_sizes"].max(initial=0)) <= n // 2:
+                ws = bucket("send", shard_list_width(senders(), n, shards))
+                cand["compact_all"] = ((k_rounds + 4) * shards * w1
+                                       + 5 * shards * ws)
+        mode = (compact_mode if compact_mode is not None
+                else min(cand, key=cand.get))
+        if mode == "compact":
+            widths["compact"] = wm
+            tables = pack_compact_rounds(win, multi, T, k_rounds, n, wm,
+                                         shards)
+        elif mode == "compact_all":
+            if ws is None:            # forced mode past the near-full gate
+                ws = bucket("send", shard_list_width(senders(), n, shards))
+            widths["compact_all"] = w1
+            widths["send"] = ws
+            tables = (*pack_compact_all(win, recv, T, k_rounds, n, w1,
+                                        shards),
+                      _pack_index_lists(senders(), n, ws, shards))
+        else:
+            tables = (dense_table(win, T, k_rounds, n),)
+        return mode, tables, stats
 
     errs_pending = []
     pending = route(0)
     for i, p in enumerate(pts):
         lo, hi = bounds[i]
-        is_compact, tables, stats = pending
-        carry, errs = get_chunk_fn(is_compact)(
+        mode, tables, stats = pending
+        carry, errs = get_chunk_fn(mode)(
             carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
             X, y, X_test, y_test, eval_idx)
         if i + 1 < len(pts):
@@ -678,11 +996,25 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         res.delivered_total += stats["delivered"]
         res.lost_total += stats["lost"]
         res.overflow_total += stats["overflow"]
+        res.delivered_per_cycle.extend(
+            int(x) for x in stats["delivered_cycles"])
+        mode_counts[mode] += 1
+        occ_recv.append(stats["recv_sizes"])
+        occ_multi.append(stats["multi_sizes"])
         res.cycles.append(p)
         errs_pending.append(errs)
     for err_f, err_v, sim in errs_pending:
         res.err_fresh.append(float(err_f))
         res.err_voted.append(float(err_v))
         res.similarity.append(float(sim))
+    r1 = np.concatenate(occ_recv) / n
+    mr = np.concatenate(occ_multi) / n
+    res.compaction = dict(
+        chunk_modes=dict(mode_counts),
+        round1_occupancy_mean=float(r1.mean()),
+        round1_occupancy_max=float(r1.max()),
+        multi_occupancy_mean=float(mr.mean()),
+        multi_occupancy_max=float(mr.max()),
+        packed_widths=dict(widths), shards=shards)
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     return res

@@ -32,7 +32,7 @@ docs/ARCHITECTURE.md).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional
 
 import jax
@@ -355,6 +355,14 @@ class SimResult:
     # the wire dtype (GossipLinearConfig.wire_dtype)
     wire_bytes_total: int = 0
     buf_payload_bytes: int = 0
+    # delivery observability (the sparse-delivery regimes of Fig. 5-7 are
+    # exactly where per-cycle cost should track deliveries, not N): the
+    # per-cycle delivered-message counts, and — sharded engine only — the
+    # compaction telemetry: chunk-mode counts (dense / compact /
+    # compact_all) and the per-cycle receiver-occupancy stats the router
+    # observed (round-1 receivers and multi-receivers as fractions of N)
+    delivered_per_cycle: List[int] = field(default_factory=list)
+    compaction: Dict[str, object] = field(default_factory=dict)
 
 
 def message_wire_bytes(d: int, wire_dtype_name) -> int:
@@ -373,6 +381,22 @@ def payload_buffer_bytes(delay_max: int, n: int, d: int,
                             + wire_overhead_bytes(wire_dtype_name))
 
 
+@functools.lru_cache(maxsize=2)
+def _host_scenario(seed: int, n: int, cycles: int, online_fraction: float,
+                   eval_nodes: int):
+    """Memoized host-side scenario draw: the churn trace and eval subset
+    are pure functions of these arguments, and a mega-population trace
+    costs ~1 s to regenerate (50 × 10^6 lognormal sessions) — benchmark
+    sweeps and warm-up/measure pairs re-enter with identical arguments, so
+    the second run should pay nothing. Callers treat the returned arrays
+    as read-only (both engines only index them). maxsize stays tiny: one
+    10^6-node × 50-cycle trace is ~50 MB."""
+    rng = np.random.default_rng(seed)
+    online_mat = churn_trace(rng, n, cycles, online_fraction)
+    eval_idx = rng.choice(n, size=min(eval_nodes, n), replace=False)
+    return online_mat, eval_idx
+
+
 def sim_setup(cfg: GossipLinearConfig, X, y, X_test, y_test, *, cycles: int,
               seed: int, eval_nodes: int):
     """Shared host-side setup for both engines.
@@ -381,10 +405,9 @@ def sim_setup(cfg: GossipLinearConfig, X, y, X_test, y_test, *, cycles: int,
     stream in a fixed order, so ``engine="reference"`` and
     ``engine="sharded"`` see identical scenarios for the same seed."""
     n = X.shape[0]
-    rng = np.random.default_rng(seed)
-    online_mat = churn_trace(rng, n, cycles, cfg.online_fraction)
-    eval_idx = jnp.asarray(rng.choice(n, size=min(eval_nodes, n), replace=False))
-    return (online_mat, eval_idx,
+    online_mat, eval_idx = _host_scenario(seed, n, cycles,
+                                          cfg.online_fraction, eval_nodes)
+    return (online_mat, jnp.asarray(eval_idx),
             jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
             jnp.asarray(X_test, jnp.float32), jnp.asarray(y_test, jnp.float32))
 
@@ -481,6 +504,7 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         res.overflow_total += int(stats["overflow"])
         res.sent_total += int(stats["sent"])
         res.delivered_total += int(stats["delivered"])
+        res.delivered_per_cycle.append(int(stats["delivered"]))
         res.lost_total += int(stats["lost"])
         if (c + 1) % eval_every == 0 or c == cycles - 1:
             err_f, err_v, sim = _eval(state.cache, eval_idx, X_test, y_test)

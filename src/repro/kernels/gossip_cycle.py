@@ -18,6 +18,13 @@ in VMEM from per-message f16 scale/zero-point), so HBM message traffic is
 paid at wire precision. The pure-jnp oracle is
 ``repro.core.simulation.apply_receives``; parity is tested in interpret mode
 on CPU (tests/test_sharded_engine.py).
+
+This module also holds the send-side counterpart, ``quantize_send``: the
+per-message affine int8 quantization (``gossip_optimizer.quantize_wire``)
+as one fused pass per node block, with the "int8_sr" stochastic-rounding
+uniform generated *in kernel* by an op-exact threefry-2x32 — bitwise equal
+to the ``jax.random.uniform`` draw of the jnp path, which the engines'
+parity contract requires (tests/test_send_kernel.py).
 """
 from __future__ import annotations
 
@@ -28,9 +35,21 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+# The threefry-2x32 cipher and the counter-at-position uniform it feeds
+# live in repro.core.gossip_optimizer (shared with the compacted send path);
+# they are pure jnp integer ops, so they trace inside the kernel body too.
+#
+# Why not ``pltpu.prng_random_bits``: the TPU-native PRNG is a *different*
+# generator — its stream cannot match the ``jax.random.uniform`` draw the
+# reference engine (and the jnp ``quantize_wire`` path) consume, and the
+# engines' parity contract requires bitwise-identical stochastic-rounding
+# noise everywhere. Threefry is 20 rounds of uint32 add/rotate/xor on the
+# VPU — cheap relative to the (N, d) HBM traffic this kernel saves.
+from repro.core.gossip_optimizer import uniform_at as _uniform_at
 from repro.kernels.pegasos_update import BLK_N, LANE, _pad_to
 
 C_SUB = 8          # pad the cache axis to the f32 sublane multiple
+SEND_BLK = 32      # node block of the send kernel (int8 min sublane tile)
 
 
 def _pegasos(w, t, x, y, lam: float):
@@ -177,3 +196,87 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
     lw_n, lt_n, cw_n, ct_n, ptr_n, cnt_n = outs
     return (lw_n[:n, :d], lt_n[:n], cw_n[:n, :c, :d], ct_n[:n, :c],
             ptr_n[:n], cnt_n[:n])
+
+
+# ---------------------------------------------------------------------------
+# send-side quantization kernel
+# ---------------------------------------------------------------------------
+
+
+
+
+def _send_kernel(key_ref, w_ref, q_out, sc_out, zp_out, *, n_real: int,
+                 d_real: int, qmax: int, stochastic: bool):
+    """Per-message affine int8 quantization of a node block — the same op
+    sequence (and order) as ``gossip_optimizer.quantize_wire``, so kernel
+    and jnp sends agree bitwise. Padded lanes are masked out of the range
+    reduction; padded rows quantize garbage that the caller slices off."""
+    w = w_ref[...].astype(jnp.float32)             # (BLK, dp)
+    blk, dp = w.shape
+    lane = lax.broadcasted_iota(jnp.int32, (blk, dp), 1)
+    real = lane < d_real
+    f16_max = float(jnp.finfo(jnp.float16).max)
+    sat = lambda v: jnp.clip(v, -f16_max, f16_max).astype(jnp.float16)
+    lo = jnp.min(jnp.where(real, w, jnp.inf), axis=-1)
+    hi = jnp.max(jnp.where(real, w, -jnp.inf), axis=-1)
+    zp = sat((hi + lo) * 0.5)
+    zpf = zp.astype(jnp.float32)
+    scale = sat(jnp.maximum(hi - zpf, zpf - lo) / qmax)
+    sf = jnp.where(scale > 0, scale, jnp.float16(1)).astype(jnp.float32)
+    u = (w - zpf[:, None]) / sf[:, None]
+    if stochastic:
+        row = (pl.program_id(0) * blk
+               + lax.broadcasted_iota(jnp.int32, (blk, dp), 0))
+        noise = _uniform_at(key_ref[0], key_ref[1], row * d_real + lane,
+                            n_real * d_real)
+        u = jnp.floor(u + noise)
+    else:
+        u = jnp.round(u)
+    q_out[...] = jnp.clip(u, -127, 127).astype(jnp.int8)
+    sc_out[...] = scale
+    zp_out[...] = zp
+
+
+@functools.partial(jax.jit, static_argnames=("name", "interpret"))
+def quantize_send(w, name: str, key_data=None, *, interpret: bool = False):
+    """Fused send-side quantization: ``quantize_wire`` as one Pallas pass.
+
+    ``w``: (N, d) f32 fresh models; returns ``(q, scale, zp)`` bitwise
+    equal to ``quantize_wire(w, name, key)`` — including the "int8_sr"
+    stochastic-rounding draw, whose threefry uniform is generated *inside*
+    the kernel from ``key_data`` (= ``jax.random.key_data(k_recv)``, the
+    same per-cycle key slot both engines use). This closes the last dense
+    f32 pass of the send path: the jnp quantizer materializes the range
+    reductions, the scaled quotient and the noise as separate (N, d)
+    HBM-resident intermediates, the kernel streams each node block through
+    VMEM once and writes int8 codes + two f16 scalars."""
+    from repro.core.gossip_optimizer import INT8_QMAX, is_stochastic_wire
+
+    n, d = w.shape
+    stochastic = is_stochastic_wire(name)
+    if stochastic and key_data is None:
+        raise ValueError("int8_sr quantization needs key_data")
+    kd = (jnp.asarray(key_data, jnp.uint32).reshape(2) if stochastic
+          else jnp.zeros((2,), jnp.uint32))
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), LANE, 1), SEND_BLK, 0)
+    np_, dp = wp.shape
+    grid = (np_ // SEND_BLK,)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0))],
+        out_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0)),
+                   pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,)),
+                   pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,))])
+    q, sc, zp = pl.pallas_call(
+        functools.partial(_send_kernel, n_real=n, d_real=d, qmax=INT8_QMAX,
+                          stochastic=stochastic),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((np_, dp), jnp.int8),
+                   jax.ShapeDtypeStruct((np_,), jnp.float16),
+                   jax.ShapeDtypeStruct((np_,), jnp.float16)],
+        interpret=interpret,
+    )(kd, wp)
+    return q[:n, :d], sc[:n], zp[:n]

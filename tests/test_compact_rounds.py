@@ -1,0 +1,220 @@
+"""Round-1 compaction (compact_all) property tests.
+
+The sharded engine's delivery-proportional paths — ``compact`` (round 1
+dense, rounds >= 2 packed) and ``compact_all`` (every round packed over the
+round-1 receiver set) — must be *invisible*: for any failure scenario, any
+wire dtype and any packing choice, the curves and the message economy equal
+the reference engine's bitwise. The scenarios here are drawn from a seeded
+rng (property-style, reproducible without hypothesis) and cover the sparse
+regimes the compaction targets, zero-delivery cycles, odd N and forced
+mid-run fallbacks."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.gossip_linear import (FAILURE_SCENARIOS,
+                                         GossipLinearConfig,
+                                         with_failure_scenario)
+from repro.core.sharded_engine import (pack_compact_all, shard_list_width,
+                                       _pack_index_lists)
+from repro.core.simulation import run_simulation
+from repro.data.synthetic import make_linear_dataset
+
+
+def cfg_for(n, d=12, **kw):
+    base = dict(name="prop", dim=d, n_nodes=n, n_test=48,
+                class_ratio=(1, 1), lam=1e-3, variant="mu")
+    base.update(kw)
+    return GossipLinearConfig(**base)
+
+
+def toy(n, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 48, d, noise=0.05, separation=3.0)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def assert_bitwise(ref, sh):
+    assert ref.cycles == sh.cycles
+    assert ref.err_fresh == sh.err_fresh, (ref.err_fresh, sh.err_fresh)
+    assert ref.err_voted == sh.err_voted
+    assert (ref.sent_total, ref.delivered_total, ref.lost_total,
+            ref.overflow_total) == (sh.sent_total, sh.delivered_total,
+                                    sh.lost_total, sh.overflow_total)
+    assert ref.delivered_per_cycle == sh.delivered_per_cycle
+
+
+# one random scenario per wire dtype, drawn from a fixed-seed rng: the
+# sweep covers every wire dtype under a different (drop, online, delay,
+# parity-of-N, k_rounds) point of the sparse-delivery region
+def _scenarios():
+    rng = np.random.default_rng(1234)
+    out = []
+    for wire in [None, "bf16", "f16", "int8", "int8_sr"]:
+        out.append(dict(
+            wire=wire,
+            drop=float(rng.uniform(0.3, 0.9)),
+            online=float(rng.uniform(0.1, 0.6)),
+            delay=int(rng.integers(2, 11)),
+            n=int(rng.integers(40, 90)) * 2 + int(rng.integers(0, 2)),
+            k_rounds=int(rng.integers(2, 6)),
+            seed=int(rng.integers(0, 1000)),
+        ))
+    return out
+
+
+@pytest.mark.parametrize("sc", _scenarios(),
+                         ids=lambda sc: f"{sc['wire'] or 'f32'}-n{sc['n']}")
+def test_sparse_delivery_compaction_bitwise(sc):
+    """Random sparse scenarios, every wire dtype: the auto-compacted
+    sharded engine reproduces the reference engine bitwise."""
+    X, y, Xt, yt = toy(sc["n"], seed=sc["seed"])
+    cfg = cfg_for(sc["n"], drop_prob=sc["drop"], online_fraction=sc["online"],
+                  delay_max_cycles=sc["delay"], wire_dtype=sc["wire"])
+    kw = dict(cycles=24, eval_every=8, seed=sc["seed"],
+              k_rounds=sc["k_rounds"])
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert_bitwise(ref, sh)
+    # sparse regimes must actually exercise a compacted packing
+    modes = sh.compaction["chunk_modes"]
+    assert modes["compact"] + modes["compact_all"] > 0, modes
+
+
+def test_zero_delivery_cycles_bitwise():
+    """drop = 1.0: every message is dropped, every cycle delivers nothing —
+    the compact tables are all padding and must stay inert."""
+    n = 33                                     # odd N on top
+    X, y, Xt, yt = toy(n)
+    cfg = cfg_for(n, drop_prob=1.0, delay_max_cycles=4, online_fraction=0.5)
+    kw = dict(cycles=12, eval_every=6, seed=7)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert_bitwise(ref, sh)
+    assert sh.delivered_total == 0
+    assert sh.delivered_per_cycle == [0] * 12
+    assert sh.compaction["round1_occupancy_max"] == 0.0
+
+
+@pytest.mark.parametrize("mode", ["dense", "compact", "compact_all"])
+@pytest.mark.parametrize("wire", [None, "int8_sr"])
+def test_forced_packing_modes_agree(mode, wire):
+    """Every forced packing (dense / compact / compact_all) produces the
+    same bits — the packing is an execution detail, never protocol."""
+    n = 96
+    X, y, Xt, yt = toy(n)
+    cfg = with_failure_scenario(
+        cfg_for(n, wire_dtype=wire), "extreme")
+    kw = dict(cycles=20, eval_every=10, seed=3, k_rounds=4)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                        compact_mode=mode, **kw)
+    assert_bitwise(ref, sh)
+    assert sh.compaction["chunk_modes"][mode] == len(sh.cycles)
+
+
+def test_forced_compact_all_to_dense_fallback_mid_run(monkeypatch):
+    """A mid-run chunk whose round-1 receiver list goes near-full must
+    leave compact_all for a cheaper packing without disturbing parity."""
+    from repro.core import sharded_engine as se
+
+    n = 64
+    X, y, Xt, yt = toy(n)
+    cfg = with_failure_scenario(cfg_for(n), "sparse-d0.8-o0.1")
+    kw = dict(cycles=24, eval_every=8, seed=5)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+
+    orig = se._HostRouter.route_chunk
+    calls = []
+
+    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds):
+        src_slot, stats, multi, recv = orig(self, dsts, arrivals,
+                                            online_rows, clock0, k_rounds)
+        if len(calls) == 1:           # middle chunk: claim full receiver set
+            full = [np.arange(self.n, dtype=np.int32)] * len(recv)
+            multi, recv = full, full
+        calls.append(0)
+        return src_slot, stats, multi, recv
+
+    monkeypatch.setattr(se._HostRouter, "route_chunk", fake)
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw)
+    assert_bitwise(ref, sh)
+    modes = sh.compaction["chunk_modes"]
+    assert modes["dense"] == 1                 # the forced chunk fell back
+    assert modes["compact_all"] >= 1           # the sparse chunks did not
+
+
+def test_sparse_scenario_prefers_compact_all():
+    """In the Fig. 5-7 sparse regimes the occupancy-based cost model must
+    actually pick the delivery-proportional packing."""
+    n = 256
+    X, y, Xt, yt = toy(n)
+    cfg = with_failure_scenario(cfg_for(n), "sparse-d0.8-o0.1")
+    sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                        cycles=30, eval_every=10, seed=2)
+    modes = sh.compaction["chunk_modes"]
+    assert modes["compact_all"] == len(sh.cycles), sh.compaction
+    assert sh.compaction["round1_occupancy_max"] <= 0.25
+
+
+def test_pack_compact_all_covers_every_round():
+    """The fully compacted tables must encode exactly the dense table:
+    every receive at the receiver's packed position, padding inert."""
+    rng = np.random.default_rng(0)
+    T, K, n = 3, 4, 32
+    src_slot = np.full((T, K, n), -1, np.int32)
+    for t in range(T):
+        nodes = rng.choice(n, size=10, replace=False)
+        for j, node in enumerate(nodes):
+            depth = 1 + (j % K)                # winner rounds fill in order
+            src_slot[t, :depth, node] = rng.integers(0, 64, size=depth)
+    recv = [np.flatnonzero(src_slot[t, 0] >= 0).astype(np.int32)
+            for t in range(T)]
+    t_w, r_w, dst_w = (a.astype(np.int32) for a in np.nonzero(src_slot >= 0))
+    win = (t_w, r_w, dst_w, src_slot[t_w, r_w, dst_w])
+    width = max(r.size for r in recv) + 3      # over-wide: padding inert
+    ridx, rslot = pack_compact_all(win, recv, T, K, n, width)
+    assert ridx.shape == (T, width) and rslot.shape == (T, K, width)
+    for t in range(T):
+        r = recv[t]
+        assert np.array_equal(ridx[t, :r.size], r)
+        assert np.all(ridx[t, r.size:] == -1)
+        assert np.all(rslot[t, :, r.size:] == -1)
+        for k in range(K):
+            assert np.array_equal(rslot[t, k, :r.size], src_slot[t, k, r])
+
+
+def test_shard_aligned_packing():
+    """Per-shard packing: shard s's receivers land in its own column block,
+    so under a node mesh each device's table slice references only its own
+    nodes; the per-shard width is the max shard population."""
+    n, shards = 32, 4                          # shard size 8
+    lists = [np.array([0, 1, 9, 30, 31], np.int32),
+             np.array([], np.int32),
+             np.array([8, 15, 16, 17, 18], np.int32)]
+    w = shard_list_width(lists, n, shards)
+    assert w == 3                              # shard 2 of cycle 2 has 3
+    packed = _pack_index_lists(lists, n, w, shards)
+    assert packed.shape == (3, shards * w)
+    for t, r in enumerate(lists):
+        got = packed[t][packed[t] >= 0]
+        assert np.array_equal(np.sort(got), r)
+        for s in range(shards):
+            seg = packed[t, s * w:(s + 1) * w]
+            seg = seg[seg >= 0]
+            assert np.all((seg >= s * 8) & (seg < (s + 1) * 8))
+    # shards=1 degenerates to the longest list
+    assert shard_list_width(lists, n, 1) == 5
+
+
+def test_failure_scenarios_registry():
+    assert set(FAILURE_SCENARIOS) >= {"clean", "extreme", "sparse-d0.8-o0.1"}
+    cfg = with_failure_scenario(cfg_for(16), "sparse-d0.5-o0.3")
+    assert (cfg.drop_prob, cfg.delay_max_cycles, cfg.online_fraction) \
+        == (0.5, 10, 0.3)
+    base = cfg_for(16)
+    assert with_failure_scenario(base, "clean") == dataclasses.replace(
+        base, drop_prob=0.0, delay_max_cycles=1, online_fraction=1.0)
+    with pytest.raises(ValueError, match="unknown failure scenario"):
+        with_failure_scenario(base, "bogus")

@@ -1,0 +1,111 @@
+"""Fused send-side quantization kernel: bitwise parity with the jnp path.
+
+``quantize_send`` must reproduce ``quantize_wire`` bit for bit — codes,
+f16 scale and zero-point — including the "int8_sr" stochastic-rounding
+uniform, which the kernel regenerates *in kernel* with an op-exact
+threefry-2x32 (the engines' parity contract rules out the TPU-native PRNG,
+whose stream differs from ``jax.random.uniform``'s)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gossip_optimizer import quantize_wire
+from repro.kernels.gossip_cycle import _uniform_at, quantize_send
+
+
+def rand_w(n, d, seed=0, spread=True):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(n, d))
+    if spread:                      # heterogeneous per-message ranges
+        w *= rng.uniform(1e-3, 30.0, size=(n, 1))
+    return jnp.asarray(w, jnp.float32)
+
+
+@pytest.mark.parametrize("n,d", [(64, 10), (33, 7), (1, 1), (128, 57),
+                                 (40, 128), (7, 130)])
+def test_quantize_send_matches_quantize_wire_int8(n, d):
+    w = rand_w(n, d, seed=n)
+    q0, s0, z0 = quantize_wire(w, "int8")
+    q1, s1, z1 = quantize_send(w, "int8", interpret=True)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1))
+
+
+@pytest.mark.parametrize("n,d", [(64, 10), (33, 7), (5, 3), (96, 57)])
+def test_quantize_send_matches_quantize_wire_int8_sr(n, d):
+    """Stochastic rounding: the in-kernel threefry draw must equal the
+    ``jax.random.uniform(k_recv, (n, d))`` draw of the jnp path — both even
+    and odd counter sizes (the odd case exercises the zero pad)."""
+    w = rand_w(n, d, seed=n + 1)
+    key = jax.random.split(jax.random.key(42), 4)[0]     # a k_recv slot
+    q0, s0, z0 = quantize_wire(w, "int8_sr", key=key)
+    q1, s1, z1 = quantize_send(w, "int8_sr",
+                               key_data=jax.random.key_data(key),
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1))
+
+
+@pytest.mark.parametrize("size", [8, 9, 2048, 2049])
+def test_uniform_at_matches_jax_random_uniform(size):
+    """The kernel's threefry helper IS jax.random.uniform, elementwise."""
+    key = jax.random.key(123)
+    ref = jax.random.uniform(key, (size,))
+    k0, k1 = (jnp.uint32(x) for x in np.asarray(jax.random.key_data(key)))
+    got = _uniform_at(k0, k1, jnp.arange(size, dtype=jnp.int32), size)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_constant_and_degenerate_rows():
+    """Constant rows (scale 0) and huge-range rows (f16 saturation) take
+    the same guarded paths as quantize_wire."""
+    w = jnp.stack([jnp.full((16,), 3.25), jnp.zeros((16,)),
+                   jnp.linspace(-7e4, 7e4, 16)]).astype(jnp.float32)
+    q0, s0, z0 = quantize_wire(w, "int8")
+    q1, s1, z1 = quantize_send(w, "int8", interpret=True)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1))
+
+
+def test_sharded_engine_send_kernel_bitwise():
+    """Engine-level: use_send_kernel routes every send through the kernel
+    and the run still reproduces the reference engine bitwise."""
+    from repro.configs.gossip_linear import GossipLinearConfig
+    from repro.core.simulation import run_simulation
+    from repro.data.synthetic import make_linear_dataset
+
+    rng = np.random.default_rng(0)
+    n, d = 64, 16
+    X, y = make_linear_dataset(rng, n + 48, d, noise=0.05, separation=3.0)
+    cfg = GossipLinearConfig(name="sendk", dim=d, n_nodes=n, n_test=48,
+                             class_ratio=(1, 1), lam=1e-3, variant="mu",
+                             drop_prob=0.5, delay_max_cycles=6,
+                             online_fraction=0.8, wire_dtype="int8_sr")
+    kw = dict(cycles=18, eval_every=6, seed=9)
+    ref = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:], **kw)
+    sh = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:], engine="sharded",
+                        use_send_kernel=True, interpret=True, **kw)
+    assert ref.cycles == sh.cycles
+    assert ref.err_fresh == sh.err_fresh
+    assert ref.err_voted == sh.err_voted
+    assert ref.sent_total == sh.sent_total
+
+
+def test_send_kernel_argument_validation():
+    from repro.configs.gossip_linear import GossipLinearConfig
+    from repro.core.simulation import run_simulation
+    from repro.data.synthetic import make_linear_dataset
+
+    rng = np.random.default_rng(0)
+    X, y = make_linear_dataset(rng, 32 + 16, 8, noise=0.05)
+    cfg = GossipLinearConfig(name="v", dim=8, n_nodes=32, n_test=16,
+                             class_ratio=(1, 1))
+    with pytest.raises(ValueError, match="int8 wire dtype"):
+        run_simulation(cfg, X[:32], y[:32], X[32:], y[32:], cycles=2,
+                       engine="sharded", use_send_kernel=True)
+    with pytest.raises(ValueError, match="needs key_data"):
+        quantize_send(jnp.zeros((4, 4)), "int8_sr", interpret=True)

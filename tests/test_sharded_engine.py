@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from repro.configs.gossip_linear import GossipLinearConfig
-from repro.core.sharded_engine import key_schedule, pack_compact_rounds
+from repro.core.sharded_engine import (dense_table, key_schedule,
+                                       pack_compact_rounds)
 from repro.core.simulation import message_wire_bytes, run_simulation
 from repro.data.synthetic import make_linear_dataset
 
@@ -146,8 +147,12 @@ def test_pack_compact_rounds_covers_every_multi_receive():
             src_slot[t, :depth, node] = rng.integers(0, 64, size=depth)
     multi = [np.flatnonzero(src_slot[t, 1] >= 0).astype(np.int32)
              for t in range(T)]
+    # the winner-tuple form the router emits (ascending t)
+    t_w, r_w, dst_w = (a.astype(np.int32) for a in np.nonzero(src_slot >= 0))
+    win = (t_w, r_w, dst_w, src_slot[t_w, r_w, dst_w])
+    assert np.array_equal(dense_table(win, T, K, n), src_slot)
     width = max(r.size for r in multi) + 3   # over-wide: padding must be inert
-    src0, ridx, rslot = pack_compact_rounds(src_slot, multi, width)
+    src0, ridx, rslot = pack_compact_rounds(win, multi, T, K, n, width)
     assert np.array_equal(src0, src_slot[:, 0])
     for t in range(T):
         m = multi[t]
@@ -159,9 +164,9 @@ def test_pack_compact_rounds_covers_every_multi_receive():
 
 
 def test_compact_dense_fallback_mid_run(monkeypatch):
-    """A chunk whose multi round is near-full (> N/2) must fall back to the
-    dense table without disturbing the compact chunks around it. Forced by
-    making the router report a full multi-receiver list for one chunk —
+    """A chunk whose receiver subsets are near-full (> N/2) must fall back
+    to the dense table without disturbing the compact chunks around it.
+    Forced by making the router report full receiver lists for one chunk —
     the src_slot table stays truthful, so the dense path must reproduce the
     reference curves while the run mixes compact and dense chunk fns."""
     from repro.core import sharded_engine as se
@@ -175,17 +180,19 @@ def test_compact_dense_fallback_mid_run(monkeypatch):
     calls = []
 
     def fake(self, dsts, arrivals, online_rows, clock0, k_rounds):
-        src_slot, stats, multi = orig(self, dsts, arrivals, online_rows,
-                                      clock0, k_rounds)
-        if len(calls) == 1:           # middle chunk: claim a near-full round
-            multi = [np.arange(self.n, dtype=np.int32)] * len(multi)
+        src_slot, stats, multi, recv = orig(self, dsts, arrivals,
+                                            online_rows, clock0, k_rounds)
+        if len(calls) == 1:           # middle chunk: claim near-full rounds
+            full = [np.arange(self.n, dtype=np.int32)] * len(multi)
+            multi, recv = full, full
         calls.append(max(r.size for r in multi))
-        return src_slot, stats, multi
+        return src_slot, stats, multi, recv
 
     monkeypatch.setattr(se._HostRouter, "route_chunk", fake)
     sh = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
                         compact_rounds=True, **kw)
     assert len(calls) == 3 and calls[1] == 128  # fallback chunk was forced
+    assert sh.compaction["chunk_modes"]["dense"] == 1  # ... and ran dense
     assert_curves_close(ref, sh)
     assert ref.sent_total == sh.sent_total
 
@@ -286,6 +293,17 @@ _MESH_SCRIPT = textwrap.dedent("""
     for a, b in zip(ref.err_fresh, sh.err_fresh):
         assert abs(a - b) <= 0.02, (ref.err_fresh, sh.err_fresh)
     assert ref.sent_total == sh.sent_total
+    # compacted rounds now run UNDER the node mesh (per-shard packed
+    # tables): the default run must have used a compact packing
+    assert sh.compaction["shards"] == 4, sh.compaction
+    cm = sh.compaction["chunk_modes"]
+    assert cm["compact"] + cm["compact_all"] > 0, cm
+
+    # forced shard-local compact_all parity under the mesh
+    sha = run_simulation(cfg, Xtr, ytr, Xt, yt, engine="sharded",
+                         mesh=mesh, compact_mode="compact_all", **kw)
+    assert sha.err_fresh == sh.err_fresh
+    assert sha.sent_total == sh.sent_total
 
     # int8 wire dtype under node sharding: the (D, N) scale/zero-point
     # lanes shard with the buffer and parity still holds

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Perf-regression guard: compare a fresh population-scaling bench run
+against the committed ``BENCH_population_scaling.json`` baseline.
+
+Usage (what ``tools/run_tests.sh --bench-smoke`` does):
+
+    cp BENCH_population_scaling.json /tmp/baseline.json   # before the bench
+    python -m benchmarks.run --quick --only population_scaling
+    python tools/check_bench_regression.py \
+        --baseline /tmp/baseline.json \
+        --current BENCH_population_scaling.json [--tolerance 0.4]
+
+Rows are matched on (engine, scenario, n_nodes, wire_dtype) — cycle counts
+may differ between --quick and full runs, but node-cycles/sec is a rate, so
+the comparison stays meaningful. A current rate below ``tolerance`` × the
+baseline rate fails loudly (exit 1) listing every regressed row; rows only
+present on one side are reported but never fail (the sweeps differ between
+quick and full mode). The tolerance band is deliberately wide: it catches
+"the engine got 2.5× slower" regressions, not CPU-container noise.
+
+Also guards the ``parity_bitwise`` probe: any wire dtype whose cross-engine
+curves stopped being bitwise-identical fails regardless of speed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def row_key(row: dict):
+    return (row.get("engine"), row.get("scenario", "extreme"),
+            row.get("n_nodes"), row.get("wire_dtype", "f32"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", default="BENCH_population_scaling.json")
+    ap.add_argument("--tolerance", type=float, default=0.4,
+                    help="fail when current rate < tolerance * baseline")
+    args = ap.parse_args()
+
+    base_fp, cur_fp = Path(args.baseline), Path(args.current)
+    if not base_fp.is_file():
+        print(f"check_bench_regression: no baseline at {base_fp} — skipping "
+              "(first run on a fresh tree)")
+        return 0
+    try:
+        base = json.loads(base_fp.read_text())
+    except ValueError:
+        print(f"check_bench_regression: unparsable baseline at {base_fp} — "
+              "treating as missing, skipping")
+        return 0
+    cur = json.loads(cur_fp.read_text())    # a broken CURRENT run is an error
+
+    base_rows = {row_key(r): r for r in base.get("rows", [])}
+    cur_rows = {row_key(r): r for r in cur.get("rows", [])}
+
+    failures = []
+    compared = 0
+    for key, crow in sorted(cur_rows.items()):
+        brow = base_rows.get(key)
+        if brow is None:
+            continue
+        compared += 1
+        b, c = brow["node_cycles_per_sec"], crow["node_cycles_per_sec"]
+        verdict = "ok"
+        if c < args.tolerance * b:
+            verdict = "REGRESSED"
+            failures.append(
+                f"  {'/'.join(str(k) for k in key)}: "
+                f"{c:,.0f} node-cycles/s vs baseline {b:,.0f} "
+                f"(ratio {c / b:.2f} < tolerance {args.tolerance})")
+        print(f"check_bench_regression: {'/'.join(str(k) for k in key)}: "
+              f"{c / b:.2f}x baseline ({verdict})")
+    skipped = len(cur_rows) - compared
+    if skipped:
+        print(f"check_bench_regression: {skipped} row(s) without a baseline "
+              "counterpart (sweep mismatch) — informational only")
+
+    for dtype, ok in cur.get("parity_bitwise", {}).items():
+        if not ok:
+            failures.append(f"  parity_bitwise[{dtype}]: cross-engine "
+                            "curves are no longer bitwise-identical")
+
+    if compared == 0:
+        print("check_bench_regression: WARNING — no comparable rows between "
+              "baseline and current run")
+    if failures:
+        print("check_bench_regression: PERF REGRESSION DETECTED:")
+        for f in failures:
+            print(f)
+        return 1
+    print(f"check_bench_regression: OK ({compared} rows within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,10 +6,14 @@
 #                                    model-zoo and perf-profile suites)
 #   tools/run_tests.sh --bench-smoke fast subset, then the population-scaling
 #                                    and wire-quantization benchmarks in
-#                                    --quick mode — an engine perf regression
-#                                    fails loudly (and refreshes
+#                                    --quick mode (refreshing
 #                                    BENCH_population_scaling.json /
-#                                    BENCH_wire_quantization.json)
+#                                    BENCH_wire_quantization.json), then
+#                                    tools/check_bench_regression.py compares
+#                                    the fresh rates against the committed
+#                                    BENCH_population_scaling.json baseline —
+#                                    an engine perf regression (or a broken
+#                                    cross-engine parity probe) fails loudly
 #
 # Every mode first runs tools/check_docs.py, so a doc referencing a removed
 # symbol fails tier 1.
@@ -38,7 +42,19 @@ fi
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     python -m pytest -x -q -k "not models and not perf" "$@"
-    exec python -m benchmarks.run --quick \
+    # snapshot the committed baseline BEFORE the quick bench overwrites it,
+    # then fail loudly if the fresh rates regressed past the tolerance band
+    baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
+    trap 'rm -f "$baseline"' EXIT
+    # mktemp pre-creates an EMPTY file: remove it so a tree without a
+    # committed baseline takes the checker's "no baseline" skip path
+    # instead of failing to parse zero bytes of JSON
+    rm -f "$baseline"
+    cp BENCH_population_scaling.json "$baseline" 2>/dev/null || true
+    python -m benchmarks.run --quick \
         --only population_scaling,wire_quantization
+    python tools/check_bench_regression.py --baseline "$baseline" \
+        --current BENCH_population_scaling.json
+    exit 0
 fi
 exec python -m pytest -x -q "$@"
