@@ -46,31 +46,41 @@ def main() -> None:
     ap.add_argument("--extreme", action="store_true",
                     help="alias for --scenario extreme")
     ap.add_argument("--wire-dtype",
-                    choices=["bf16", "f16", "int8", "int8_sr"], default=None,
-                    help="quantize payloads on the wire (and the in-flight "
-                         "buffer — the engine's dominant memory) to this "
-                         "dtype; merge math stays f32")
+                    choices=["f32", "bf16", "f16", "int8", "int8_sr",
+                             "int4", "int4_ef", "ternary", "ternary_ef"],
+                    default=None,
+                    help="wire codec for the transmitted models (and the "
+                         "in-flight buffer — the engine's dominant memory): "
+                         "float casts, affine int8, packed int4 (2 "
+                         "codes/byte) or base-3 ternary (5 codes/byte); "
+                         "the _ef variants add sender-side error-feedback "
+                         "residuals. Merge math stays f32")
     args = ap.parse_args()
     scenario = args.scenario or ("extreme" if args.extreme else "clean")
 
     from repro.configs.gossip_linear import (GossipLinearConfig,
                                              with_failure_scenario)
-    from repro.core.simulation import run_simulation
+    from repro.core.simulation import message_wire_bytes, run_simulation
+    from repro.core.wire_codec import get_codec
     from repro.data.synthetic import make_linear_dataset
 
     n, d = args.nodes, args.dim
+    wire = None if args.wire_dtype == "f32" else args.wire_dtype
+    codec = get_codec(wire)
     rng = np.random.default_rng(0)
     X, y = make_linear_dataset(rng, n + 1000, d, noise=0.07, separation=2.5)
     cfg = with_failure_scenario(
         GossipLinearConfig(
             name=f"million-{n}", dim=d, n_nodes=n, n_test=1000,
             class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
-            wire_dtype=args.wire_dtype),
+            wire_dtype=wire),
         SCENARIOS[scenario])
 
     print(f"N={n:,} peers (one record each), d={d}, "
           f"{args.cycles} cycles, variant=MU, "
-          f"wire={args.wire_dtype or 'f32'}, scenario={scenario} "
+          f"wire={codec.name} ({message_wire_bytes(d, wire)} B/msg"
+          f"{', error feedback' if codec.ef else ''}), "
+          f"scenario={scenario} "
           f"(drop={cfg.drop_prob}, delay<= {cfg.delay_max_cycles} cycles, "
           f"online={cfg.online_fraction:.0%})")
     t0 = time.time()
@@ -85,8 +95,13 @@ def main() -> None:
     print(f"\n{n * args.cycles / dt:,.0f} node-cycles/sec "
           f"({dt:.1f}s wall; {res.sent_total:,} messages sent, "
           f"{res.delivered_total:,} delivered, {res.lost_total:,} lost)")
-    print(f"bandwidth: {res.wire_bytes_total / 1e9:.3f} GB on the wire, "
+    print(f"bandwidth: {res.wire_bytes_total / 1e9:.3f} GB on the wire "
+          f"({message_wire_bytes(d, wire)} B/msg), "
           f"in-flight payload buffer {res.buf_payload_bytes / 1e6:.1f} MB")
+    if codec.ef:
+        print(f"error feedback: terminal EF-residual norm "
+              f"{res.ef_residual_norm:.4f} (RMS per-node L2; the residual "
+              f"each sender still owes the wire)")
 
     # compaction observability: what the router saw, what the engine chose
     dpc = np.asarray(res.delivered_per_cycle, dtype=np.float64)

@@ -51,16 +51,21 @@ class GossipLinearConfig:
     * ``online_fraction``: stationary fraction of nodes online under the
       lognormal churn trace (1.0 disables churn).
 
-    Wire quantization (beyond-paper, ``repro.core.gossip_optimizer``):
+    Wire codec (beyond-paper, ``repro.core.wire_codec``):
 
-    * ``wire_dtype``: dtype of the *transmitted* model — and of the
-      simulator's in-flight payload buffer, the dominant memory at
-      ``(delay_max, N, d)``. ``None``/"f32" = full precision; "bf16"/"f16"
-      = half-precision cast; "int8"/"int8_sr" = per-message affine int8
-      (an f16 scale/zero-point pair rides with each message, +4 wire
-      bytes). "int8_sr" rounds stochastically (unbiased) using a
-      reproducible per-cycle threefry key. Merge arithmetic is always f32
-      — only the wire representation changes. Measured trade-offs:
+    * ``wire_dtype``: name of the wire codec for the *transmitted* model —
+      and of the simulator's in-flight payload buffer, the dominant memory
+      at ``(delay_max, N, P)``. ``None``/"f32" = full precision;
+      "bf16"/"f16" = half-precision cast; "int8"/"int8_sr" = per-message
+      affine int8 (an f16 scale/zero-point pair rides with each message,
+      +4 wire bytes; "_sr" rounds stochastically from a reproducible
+      per-cycle threefry key); "int4"/"int4_ef" = symmetric ±7 codes
+      packed two per byte (f16 scale, +2 wire bytes); "ternary"/
+      "ternary_ef" = sign+scale codes packed five per byte base-3. The
+      "_ef" variants keep a per-sender error-feedback residual
+      (``SimState.ef`` — protocol state: what the coarse code lost rides
+      on the next send). Merge arithmetic is always f32 — only the wire
+      representation changes. Measured trade-offs:
       ``BENCH_wire_quantization.json`` and docs/ENGINES.md.
 
     * ``citation``: provenance of the experimental setup."""

@@ -47,208 +47,45 @@ class GossipState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# wire dtypes — shared by the on-mesh optimizer (``exchange_dtype``) and the
-# protocol simulator (``GossipLinearConfig.wire_dtype``): the transmitted
-# model is quantized on the wire, the merge arithmetic stays f32.
-#
-# Two families:
-#
-# * float wire dtypes ("bf16"/"f16") — a plain dtype cast at send time;
-# * sub-byte wire dtypes ("int8"/"int8_sr") — per-message affine int8
-#   quantization: each transmitted model carries an f16 (scale, zero_point)
-#   pair computed from that message's coefficient range, and the receiver
-#   dequantizes before the f32 merge. "int8_sr" replaces round-to-nearest
-#   with stochastic rounding (unbiased: E[q] = w), driven by a counter-based
-#   threefry key so runs stay reproducible.
+# wire codecs — the registry, the quantizers and the reproducible-noise
+# helpers live in repro.core.wire_codec (one home for the constants and the
+# pack/unpack logic shared with the Pallas kernels); re-exported here
+# because this module is the optimizer-side consumer (``exchange_dtype``)
+# and the historical import site.
 # ---------------------------------------------------------------------------
 
-WIRE_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16, "f32": jnp.float32,
-               "int8": jnp.int8, "int8_sr": jnp.int8}
-
-# wire-dtype names that use per-message affine int8 quantization
-INT8_WIRE_DTYPES = frozenset({"int8", "int8_sr"})
-
-# int8 payloads target [-126, 126]: one code of headroom keeps the clip at
-# ±127 inert even after the scale is rounded to its f16 wire representation
-INT8_QMAX = 126
-
-
-def resolve_wire_dtype(name):
-    """Wire-dtype name -> jnp dtype, or None for full precision.
-
-    ``None``/``""``/``"f32"`` mean no quantization (f32 is the native payload
-    dtype, so requesting it is a no-op). ``"int8"`` and ``"int8_sr"`` both
-    resolve to ``jnp.int8`` — the payload storage dtype; the rounding mode is
-    carried by the *name* (see :func:`quantize_wire`)."""
-    if not name or name == "f32":
-        return None
-    try:
-        return WIRE_DTYPES[name]
-    except KeyError:
-        raise ValueError(f"unknown wire dtype {name!r} "
-                         f"(expected one of {sorted(WIRE_DTYPES)})") from None
+from repro.core.wire_codec import (INT8_QMAX, INT8_WIRE_DTYPES,  # noqa: F401
+                                   WIRE_CODECS, WIRE_DTYPES,
+                                   dequantize_wire, deterministic_codec,
+                                   get_codec, is_quantized_wire,
+                                   is_stochastic_wire, quantize_wire,
+                                   resolve_wire_dtype, sr_noise_for_rows,
+                                   threefry2x32, uniform_at, wire_itemsize,
+                                   wire_overhead_bytes)
 
 
-def is_quantized_wire(name) -> bool:
-    """True for the affine-int8 wire dtypes (payload needs scale/zero-point)."""
-    return name in INT8_WIRE_DTYPES
+def _resolve_exchange(exchange_dtype):
+    """Normalize ``gossip_merge``'s ``exchange_dtype`` argument.
 
-
-def is_stochastic_wire(name) -> bool:
-    """True when the wire dtype rounds stochastically (needs a PRNG key)."""
-    return name == "int8_sr"
-
-
-def wire_itemsize(name) -> int:
-    """Bytes per transmitted model coefficient for a wire-dtype name."""
-    dt = resolve_wire_dtype(name)
-    return 4 if dt is None else jnp.dtype(dt).itemsize
-
-
-def wire_overhead_bytes(name) -> int:
-    """Per-message metadata bytes beyond the coefficients: the affine int8
-    dtypes ship an f16 scale + f16 zero-point with every message."""
-    return 4 if is_quantized_wire(name) else 0
-
-
-def threefry2x32(k0, k1, x0, x1):
-    """Threefry-2x32 block cipher on uint32 arrays — op-for-op the unrolled
-    lowering of JAX's ``threefry2x32_p`` (jax._src.prng), so the bits are
-    identical to what ``jax.random`` produces for the same key/counters.
-    Pure jnp integer ops: usable under jit, inside ``lax.scan`` bodies and
-    inside Pallas kernels alike."""
-    def rotl(v, r):
-        return (v << jnp.uint32(r)) | (v >> jnp.uint32(32 - r))
-
-    rot = ((13, 15, 26, 6), (17, 29, 16, 24))
-    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(0x1BD11BDA))
-    x = [x0 + ks[0], x1 + ks[1]]
-    for i in range(5):
-        for r in rot[i % 2]:
-            x[0] = x[0] + x[1]
-            x[1] = rotl(x[1], r)
-            x[1] = x[0] ^ x[1]
-        x[0] = x[0] + ks[(i + 1) % 3]
-        x[1] = x[1] + ks[(i + 2) % 3] + jnp.uint32(i + 1)
-    return x[0], x[1]
-
-
-def uniform_at(k0, k1, p, size: int):
-    """``jax.random.uniform(key, shape)`` evaluated at flat positions ``p``
-    of an array with ``size`` total elements.
-
-    Reproduces the original (non-partitionable) threefry counter scheme of
-    ``jax._src.prng._threefry_random_bits_original`` bit for bit: the iota
-    counter array of ``size`` elements is split in half (odd sizes pad one
-    zero), element p < half is lane 0 of the block (p, half+p), element
-    p >= half is lane 1 of the block (p-half, p) — each element evaluates
-    exactly one 20-round block, with no cross-lane communication. The
-    uint32 bits map to [0, 1) floats with the same mantissa-fill transform
-    ``jax.random.uniform`` applies.
-
-    This is what lets both the Pallas send kernel and the compacted
-    send path regenerate the "int8_sr" noise for an arbitrary *subset* of
-    messages without a dense (N, d) draw, bitwise-equal to the full-array
-    ``jax.random.uniform`` the reference engine consumes."""
-    if jax.config.jax_threefry_partitionable:
-        # the partitionable PRNG uses a different counter scheme: this
-        # helper would silently diverge from jax.random.uniform and break
-        # the engines' bitwise int8_sr parity contract — fail loudly
-        # instead (supporting it means implementing the partitionable
-        # scheme here AND in the Pallas send kernel, both parity-tested)
-        raise NotImplementedError(
-            "uniform_at implements the original (non-partitionable) "
-            "threefry counter scheme; run with "
-            "jax_threefry_partitionable=False for the int8_sr wire dtype")
-    half = (size + 1) // 2
-    is_lo = p < half
-    pair = p + half
-    x0 = jnp.where(is_lo, p, p - half)
-    # the odd-size zero pad sits at padded position `size`
-    x1 = jnp.where(is_lo, jnp.where(pair < size, pair, 0), p)
-    y0, y1 = threefry2x32(k0, k1, x0.astype(jnp.uint32),
-                          x1.astype(jnp.uint32))
-    bits = jnp.where(is_lo, y0, y1)
-    fbits = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
-    return jax.lax.bitcast_convert_type(fbits, jnp.float32) - 1.0
-
-
-def sr_noise_for_rows(key, rows, d: int, n_total: int):
-    """The ``jax.random.uniform(key, (n_total, d))`` noise of a full-array
-    "int8_sr" quantization, evaluated only at the given ``rows``:
-    ``sr_noise_for_rows(key, rows, d, n)`` ==
-    ``jax.random.uniform(key, (n, d))[rows]`` bitwise, at O(len(rows)·d)
-    threefry work. ``key`` is a typed threefry key (the per-cycle
-    ``k_recv`` slot)."""
-    kd = jax.random.key_data(key).astype(jnp.uint32)
-    p = rows[:, None] * d + jnp.arange(d, dtype=rows.dtype)[None, :]
-    return uniform_at(kd[0], kd[1], p, n_total * d)
-
-
-def quantize_wire(w, name, key=None, noise=None):
-    """Per-message affine int8 quantization of a batch of models.
-
-    ``w``: (..., d) f32 — each slice along the last axis is one transmitted
-    model (one message). Returns ``(q, scale, zp)`` with ``q`` int8 of
-    ``w.shape`` and ``scale``/``zp`` f16 of ``w.shape[:-1]`` — the f16
-    values are exactly what rides the wire, and the SAME rounded values are
-    used by the quantizer itself, so the round-trip error is bounded by one
-    quantization step of the *transmitted* scale:
-
-      |w - dequantize(q, scale, zp)| <= scale      (per coordinate)
-
-    (<= scale/2 for round-to-nearest; stochastic rounding is unbiased but
-    may land a full step away). ``zp`` is the f16-rounded range midpoint and
-    ``scale`` covers the residual range ``max(hi-zp, zp-lo)`` over
-    ``INT8_QMAX`` codes, so codes stay within ±127 even after f16 rounding —
-    the defensive clip never distorts.
-
-    ``name``: "int8" rounds to nearest (deterministic); "int8_sr" adds
-    uniform [0, 1) noise before the floor — ``key`` (threefry) is required
-    and makes the draw reproducible: both simulator engines feed the same
-    per-cycle ``k_recv`` key here, keeping cross-engine parity bitwise.
-    ``noise`` (optional, "int8_sr" only) supplies the uniform draw directly
-    instead of ``key`` — the compacted send path passes
-    :func:`sr_noise_for_rows` values so a subset quantization consumes
-    exactly the noise the full-array draw would have given those rows.
-
-    Precondition: coefficients are expected inside the f16-representable
-    range (|w| ≲ 6.5e4 — far beyond any non-divergent linear model here;
-    Pegasos is bounded by 1/sqrt(lam)). Outside it the f16 scale/zero-point
-    SATURATE at the f16 max instead of overflowing to inf, so a divergent
-    run stays finite on the wire (grossly quantized) rather than flooding
-    every merge with NaNs."""
-    f16_max = float(jnp.finfo(jnp.float16).max)
-    sat = lambda v: jnp.clip(v, -f16_max, f16_max).astype(jnp.float16)
-    w = w.astype(jnp.float32)
-    lo = jnp.min(w, axis=-1)
-    hi = jnp.max(w, axis=-1)
-    zp = sat((hi + lo) * 0.5)
-    zpf = zp.astype(jnp.float32)
-    scale = sat(jnp.maximum(hi - zpf, zpf - lo) / INT8_QMAX)
-    # guarded divisor: a constant message (hi == lo, scale 0) maps every
-    # coordinate to code 0 and dequantizes to exactly zp
-    sf = jnp.where(scale > 0, scale, jnp.float16(1)).astype(jnp.float32)
-    u = (w - zpf[..., None]) / sf[..., None]
-    if name == "int8_sr":
-        if noise is None:
-            if key is None:
-                raise ValueError("int8_sr quantization needs a PRNG key")
-            noise = jax.random.uniform(key, w.shape)
-        u = jnp.floor(u + noise)
-    else:
-        u = jnp.round(u)
-    q = jnp.clip(u, -127, 127).astype(jnp.int8)
-    return q, scale, zp
-
-
-def dequantize_wire(q, scale, zp):
-    """Inverse of :func:`quantize_wire`: ``q * scale + zp`` in f32.
-
-    The Pallas ``gossip_cycle`` kernel applies this same expression in-VMEM
-    (same op order), so kernel and jnp paths agree bitwise."""
-    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
-            + zp.astype(jnp.float32)[..., None])
+    Accepts a wire-codec *name* ("bf16", "int8", "int4_ef", …), a plain
+    jnp dtype (the legacy spelling: 16-bit floats cast, ``jnp.int8`` = the
+    "int8" codec), or None. Returns ``(codec, cast_dtype)`` — exactly one
+    of which is non-None for a quantizing exchange: ``codec`` for the
+    scale-carrying codecs (always the deterministic sibling — no per-step
+    key exists here), ``cast_dtype`` for plain float casts."""
+    if exchange_dtype is None:
+        return None, None
+    if isinstance(exchange_dtype, str):
+        codec = deterministic_codec(get_codec(exchange_dtype))
+        if codec.quantized:
+            return codec, None
+        if codec.name == "f32":
+            return None, None
+        return None, codec.payload_dtype
+    dtype = jnp.dtype(exchange_dtype)
+    if dtype == jnp.int8:
+        return get_codec("int8"), None
+    return None, exchange_dtype
 
 
 def stack_for_peers(params, n_peers: int):
@@ -280,35 +117,39 @@ def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
     peer axis — measured at 5.7 GB/device/step for qwen3-8b vs 0.03 GB for
     the ppermute (EXPERIMENTS.md §Perf, gossip hillclimb).
 
-    ``exchange_dtype`` (beyond-paper): wire dtype for the exchanged model
-    (e.g. bf16) — the partner's contribution is quantized on the wire but
-    the average is taken in f32, halving the sync wire bytes. ``jnp.int8``
-    (``resolve_wire_dtype("int8")``/``("int8_sr")``) selects per-row affine
-    int8 quantization — each leaf row is quantized over its last axis with
-    :func:`quantize_wire` and dequantized before the f32 average, the exact
-    semantics of the protocol simulator's int8 wire path (pinned in
-    tests/test_wire_quantization.py). The optimizer path always rounds to
-    nearest: stochastic rounding needs a per-step key, which the simulator's
-    per-cycle ``k_recv`` stream provides but the train step does not thread."""
+    ``exchange_dtype`` (beyond-paper): wire representation of the exchanged
+    model — the partner's contribution is quantized on the wire but the
+    average is taken in f32, cutting the sync wire bytes. Accepts a wire
+    *codec name* from ``repro.core.wire_codec.WIRE_CODECS`` ("bf16",
+    "int8", "int4", "ternary", …), a plain jnp dtype (legacy spelling:
+    bf16/f16 cast; ``jnp.int8`` = the "int8" codec), or None. Quantized
+    codecs round-trip each leaf row through ``codec.encode``/``decode``
+    over its last axis before the f32 average — the exact semantics of the
+    protocol simulator's wire path (pinned in
+    tests/test_wire_quantization.py and tests/test_wire_codec.py). The
+    optimizer path always rounds to nearest ("int8_sr" maps to its
+    deterministic sibling: a train step threads no per-step key) and keeps
+    no error-feedback state (the ``_ef`` codecs quantize one-shot here —
+    EF residuals are per-*sender* protocol state, which lives in the
+    simulator engines, not in the stateless merge)."""
     perm = np.asarray(perm)
     pairs = [(s, int(perm[s])) for s in range(len(perm))]
-    int8_exchange = (exchange_dtype is not None
-                     and jnp.dtype(exchange_dtype) == jnp.int8)
+    codec, cast_dtype = _resolve_exchange(exchange_dtype)
 
-    def int8_wire(v):
-        """Affine round-trip with per-peer-row grouping: a leaf must never
-        share one scale across peers, so rank-<2 leaves (per-peer scalars
-        here; per-device scalars in the mesh body) gain a trailing axis of
-        one before the per-last-axis quantization."""
+    def codec_roundtrip(v):
+        """Quantized round-trip with per-peer-row grouping: a leaf must
+        never share one scale across peers, so rank-<2 leaves (per-peer
+        scalars here; per-device scalars in the mesh body) gain a trailing
+        axis of one before the per-last-axis quantization."""
         x = v[..., None] if v.ndim < 2 else v
-        return dequantize_wire(*quantize_wire(x, "int8")).reshape(v.shape)
+        return codec.roundtrip(x).reshape(v.shape)
 
     def on_wire(partner):
-        if exchange_dtype is None:
-            return partner
-        if int8_exchange:
-            return int8_wire(partner)
-        return partner.astype(exchange_dtype)
+        if codec is not None:
+            return codec_roundtrip(partner)
+        if cast_dtype is not None:
+            return partner.astype(cast_dtype)
+        return partner
 
     def avg_take(p):
         partner = on_wire(p[perm])
@@ -327,30 +168,33 @@ def gossip_merge(params, perm, *, mesh=None, peer_axes: Tuple[str, ...] = (),
 
     def body(tree):
         def avg(x):
-            if exchange_dtype is None or x.dtype == exchange_dtype:
-                xin = jax.lax.ppermute(x, axis, pairs)
-            elif int8_exchange:
-                # quantize locally, permute the int8 codes plus their f16
-                # scale/zero-point, dequantize on arrival: d + 4 wire bytes
-                # per row instead of 4d. Integer codes are opaque to the
+            if codec is not None:
+                # quantize locally, permute the packed codes plus their f16
+                # scale (and zero-point when the codec carries one),
+                # dequantize on arrival: payload + overhead wire bytes per
+                # row instead of 4d. Integer codes are opaque to the
                 # algebraic simplifier, so no bitcast trick is needed.
                 # Rank-<2 blocks take the same trailing-axis path as
-                # ``int8_wire`` so mesh and non-mesh grouping agree.
+                # ``codec_roundtrip`` so mesh and non-mesh grouping agree.
                 xg = x[..., None] if x.ndim < 2 else x
-                q, sc, zp = quantize_wire(xg, "int8")
-                xin = dequantize_wire(jax.lax.ppermute(q, axis, pairs),
-                                      jax.lax.ppermute(sc, axis, pairs),
-                                      jax.lax.ppermute(zp, axis, pairs)
-                                      ).reshape(x.shape)
+                payload, sc, zp = codec.encode(xg)
+                xin = codec.decode(
+                    jax.lax.ppermute(payload, axis, pairs),
+                    jax.lax.ppermute(sc, axis, pairs),
+                    jax.lax.ppermute(zp, axis, pairs) if zp is not None
+                    else None,
+                    xg.shape[-1]).reshape(x.shape)
+            elif cast_dtype is None or x.dtype == cast_dtype:
+                xin = jax.lax.ppermute(x, axis, pairs)
             else:
                 # permute a bitcast integer view of the quantized value:
                 # a plain convert around the ppermute gets commuted back to
                 # the wide dtype by the algebraic simplifier (the wire-dtype
                 # saving would silently vanish); a bitcast is opaque to it.
-                xw = jax.lax.bitcast_convert_type(x.astype(exchange_dtype),
+                xw = jax.lax.bitcast_convert_type(x.astype(cast_dtype),
                                                   jnp.uint16)
                 xin = jax.lax.bitcast_convert_type(
-                    jax.lax.ppermute(xw, axis, pairs), exchange_dtype)
+                    jax.lax.ppermute(xw, axis, pairs), cast_dtype)
             return ((x.astype(jnp.float32) + xin.astype(jnp.float32)) / 2.0).astype(x.dtype)
         return jax.tree.map(avg, tree)
 
@@ -388,8 +232,9 @@ def make_gossip_train_step(loss_fn: Callable, opt: Optimizer, n_peers: int,
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     vmap_kw = {"spmd_axis_name": spmd_axis} if spmd_axis else {}
-    xdt = resolve_wire_dtype(cfg.exchange_dtype)
-    merge_kw = dict(mesh=mesh, exchange_dtype=xdt,
+    # the codec *name* goes straight through — gossip_merge resolves it
+    # (any registered wire codec works as an exchange representation)
+    merge_kw = dict(mesh=mesh, exchange_dtype=cfg.exchange_dtype or None,
                     peer_axes=peer_axes or
                     ((spmd_axis,) if spmd_axis and mesh is not None else ()))
 

@@ -41,18 +41,26 @@ network:
   regime of the paper's Fig. 5–7). Under a node mesh the tables are packed
   per shard, so the compact paths run inside ``shard_map`` too; the dense
   fallback is kept for near-full subsets.
-* **wire-dtype payloads** — ``cfg.wire_dtype="bf16"/"f16"/"int8"/
-  "int8_sr"`` stores the in-flight ``buf_w`` (the engine's dominant memory:
-  ``(D, N, d)``) in the wire dtype; messages are quantized at send time and
-  all merge math runs in f32, the exact contract of ``gossip_merge``'s
-  ``exchange_dtype``. The affine int8 dtypes carry per-message f16
-  scale/zero-point lanes (``buf_scale``/``buf_zp``) and dequantize at
-  delivery — in-kernel for the Pallas path; "int8_sr" rounds stochastically
-  with the same per-cycle ``k_recv`` threefry slot as the reference engine.
-  With ``use_send_kernel`` the send-side quantization itself runs as the
-  fused Pallas ``quantize_send`` kernel (in-kernel threefry for the SR
-  draw), closing the last full-population f32 pass per cycle.
-  ``SimResult`` reports ``wire_bytes_total``/``buf_payload_bytes``.
+* **wire-codec payloads** — ``cfg.wire_dtype`` names a codec from
+  ``repro.core.wire_codec`` and stores the in-flight ``buf_w`` (the
+  engine's dominant memory: ``(D, N, P)`` with P the codec's packed width)
+  in the codec's payload representation; messages are encoded at send time
+  and all merge math runs in f32, the exact contract of ``gossip_merge``'s
+  ``exchange_dtype``. Quantized codecs carry a per-message f16 scale lane
+  (``buf_scale``; the affine int8 family adds ``buf_zp``) and decode at
+  delivery — in-kernel for the Pallas path (including the packed int4/
+  ternary unpack); "int8_sr" rounds stochastically with the same per-cycle
+  ``k_recv`` threefry slot as the reference engine. The ``_ef`` codecs
+  (int4_ef/ternary_ef) add the (N, d) f32 error-feedback residual to the
+  carry: senders transmit ``fresh + ef`` and refresh the residual only on
+  cycles they actually send — the dense/compact bodies scan the router's
+  per-cycle send mask, ``compact_all`` refreshes the sender subset — which
+  keeps all packings bitwise-equal to the reference engine. With
+  ``use_send_kernel`` the send-side quantization runs as the fused Pallas
+  ``quantize_send`` kernel (in-kernel threefry for the SR draw; in-kernel
+  pack + fused EF-residual output for the sub-4-bit codecs), closing the
+  last full-population f32 pass per cycle. ``SimResult`` reports
+  ``wire_bytes_total``/``buf_payload_bytes``/``ef_residual_norm``.
 
 Determinism contract: for a given seed the engine consumes the *same* host
 RNG stream (churn trace, eval subset) and the *same* per-cycle threefry
@@ -75,15 +83,12 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
-from repro.core.gossip_optimizer import (dequantize_wire, is_quantized_wire,
-                                         is_stochastic_wire, quantize_wire,
-                                         resolve_wire_dtype,
-                                         sr_noise_for_rows)
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
-from repro.core.simulation import (SimResult, _eval, eval_points,
-                                   message_wire_bytes, payload_buffer_bytes,
-                                   sim_setup)
+from repro.core.simulation import (SimResult, _eval, ef_residual_norm,
+                                   eval_points, message_wire_bytes,
+                                   payload_buffer_bytes, sim_setup)
+from repro.core.wire_codec import get_codec, sr_noise_for_rows
 from repro.sharding.compat import shard_map_compat
 
 
@@ -444,13 +449,14 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
     return prev_w, prev_t, fw, ft, new_cache
 
 
-def _pallas_apply(lam: float, interpret: bool):
+def _pallas_apply(lam: float, interpret: bool, wire):
     """Receive application backed by the fused Pallas gossip-cycle kernel.
 
-    Affine-int8 wire payloads pass straight through: ``msg_w`` stays int8
-    and the per-message f16 ``msg_scale``/``msg_zp`` ride along — the kernel
-    dequantizes in VMEM, so HBM message traffic is paid at one byte per
-    coefficient."""
+    Quantized wire payloads pass straight through: ``msg_w`` stays in the
+    codec's packed representation and the per-message f16 ``msg_scale``
+    (plus ``msg_zp`` for the affine int8 family) ride along — the kernel
+    decodes in VMEM (affine dequant, int4 nibble unpack, base-3 ternary
+    unpack), so HBM message traffic is paid at wire precision."""
     from repro.kernels.gossip_cycle import fused_receive_apply
 
     def apply_fn(last_w, last_t, fresh_w, fresh_t, cache, msg_w, msg_t,
@@ -460,7 +466,7 @@ def _pallas_apply(lam: float, interpret: bool):
         lw, lt, cw, ct, ptr, cnt = fused_receive_apply(
             last_w, last_t, cache.w, cache.t, cache.ptr, cache.count,
             msg_w, msg_t, valid.astype(jnp.int32), X, y,
-            msg_scale=msg_scale, msg_zp=msg_zp,
+            msg_scale=msg_scale, msg_zp=msg_zp, wire=wire,
             variant=variant, lam=lam, interpret=interpret)
         new_cache = ModelCache(cw, ct, ptr, cnt)
         fw, ft = cache_mod.freshest(new_cache)
@@ -475,29 +481,29 @@ def _shard_apply(base_apply, mesh, axis: str):
     Every operand carries the node dimension (leading for state/example
     arrays, second for the (K, N, ...) message stack) and the computation is
     purely per-node, so the body needs no collectives. The optional
-    ``msg_scale``/``msg_zp`` metadata of the int8-Pallas path shards like
-    the message stack."""
+    ``msg_scale``/``msg_zp`` metadata of the quantized Pallas path shards
+    like the message stack (scale-only codecs pass no ``msg_zp``)."""
     ps_n, ps_kn = PS(axis), PS(None, axis)
 
     def apply_fn(last_w, last_t, fresh_w, fresh_t, cache, msg_w, msg_t,
                  valid, X, y, *, variant, update, msg_scale=None,
                  msg_zp=None):
-        quantized = msg_scale is not None
+        meta = [(k, v) for k, v in (("msg_scale", msg_scale),
+                                    ("msg_zp", msg_zp)) if v is not None]
 
         def inner(lw, lt, fw, ft, cw, ct, cp, cc, mw, mt, vl, Xs, ys,
-                  *meta):
-            kw = dict(msg_scale=meta[0], msg_zp=meta[1]) if quantized else {}
+                  *meta_vals):
+            kw = dict(zip((k for k, _ in meta), meta_vals))
             lw2, lt2, fw2, ft2, c2 = base_apply(
                 lw, lt, fw, ft, ModelCache(cw, ct, cp, cc), mw, mt, vl,
                 Xs, ys, variant=variant, update=update, **kw)
             return lw2, lt2, fw2, ft2, c2.w, c2.t, c2.ptr, c2.count
 
-        in_specs = (ps_n,) * 8 + (ps_kn,) * 3 + (ps_n,) * 2
+        in_specs = (ps_n,) * 8 + (ps_kn,) * 3 + (ps_n,) * 2 \
+            + (ps_kn,) * len(meta)
         args = [last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
-                cache.ptr, cache.count, msg_w, msg_t, valid, X, y]
-        if quantized:
-            in_specs = in_specs + (ps_kn,) * 2
-            args = args + [msg_scale, msg_zp]
+                cache.ptr, cache.count, msg_w, msg_t, valid, X, y] \
+            + [v for _, v in meta]
         f = shard_map_compat(inner, mesh=mesh, in_specs=in_specs,
                              out_specs=(ps_n,) * 8)
         lw2, lt2, fw2, ft2, cw, ct, cp, cc = f(*args)
@@ -536,26 +542,31 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     ``shard_map``. Only the Pallas *receive* kernel still requires the
     dense table (its grid covers all node blocks).
 
-    ``wire`` is the wire-dtype name. The affine int8 dtypes quantize at
-    send (per-message f16 scale/zero-point written into the buf_scale/
-    buf_zp carry lanes) and dequantize at delivery — in the scan body for
-    the jnp paths, in VMEM for the Pallas kernel. "int8_sr" derives its
-    per-cycle stochastic-rounding key from the scanned key stream exactly
-    like the reference engine's ``k_recv`` (first slot of the 4-way split),
-    so cross-engine parity stays bitwise. ``use_send_kernel`` routes the
-    send-side quantization through the fused Pallas
-    ``quantize_send`` kernel (in-kernel threefry for the SR draw) instead
-    of the jnp ``quantize_wire`` ops — bitwise-identical by contract."""
+    ``wire`` is the wire-codec name. Quantized codecs encode at send
+    (per-message f16 scale — plus a zero-point for the affine int8 family —
+    written into the buf_scale/buf_zp carry lanes) and decode at delivery —
+    in the scan body for the jnp paths, in VMEM for the Pallas kernel.
+    "int8_sr" derives its per-cycle stochastic-rounding key from the
+    scanned key stream exactly like the reference engine's ``k_recv``
+    (first slot of the 4-way split), so cross-engine parity stays bitwise.
+    The ``_ef`` codecs carry the (N, d) f32 error-feedback residual and
+    scan the router's per-cycle send mask (dense/compact modes) or refresh
+    the sender subset (``compact_all``) — the residual updates exactly
+    where the reference engine's ``send_ok`` holds. ``use_send_kernel``
+    routes the send-side quantization through the fused Pallas
+    ``quantize_send`` kernel (in-kernel threefry for the SR draw; fused
+    pack + EF-residual output for the sub-4-bit codecs) instead of the jnp
+    codec ops — bitwise-identical by contract."""
     update = make_update(learner, lam=lam, eta=eta)
-    apply_fn = _pallas_apply(lam, interpret) if use_pallas else _vector_apply
+    apply_fn = (_pallas_apply(lam, interpret, wire) if use_pallas
+                else _vector_apply)
     if mesh is not None and axis is not None:
         apply_fn = _shard_apply(apply_fn, mesh, axis)
     if mode != "dense" and use_pallas:
         raise ValueError("compacted rounds require the vector apply "
                          "(the Pallas receive kernel is dense)")
     D = delay_max
-    quantized = is_quantized_wire(wire)
-    stochastic = is_stochastic_wire(wire)
+    codec = get_codec(wire)
     if use_send_kernel:
         from repro.kernels.gossip_cycle import quantize_send
 
@@ -567,43 +578,63 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             return X, y
 
         def gather(buf_w, buf_scale, buf_zp, idx, d):
-            """Winning payloads for slot table ``idx``, dequantized for the
-            jnp apply paths; the Pallas path gets the raw int8 codes plus
-            their scale/zero-point as kwargs (in-kernel dequant)."""
-            msg_w = buf_w.reshape(-1, d)[idx]
-            if not quantized:
+            """Winning payloads for slot table ``idx``, decoded for the
+            jnp apply paths; the Pallas path gets the raw packed codes plus
+            their scale (and zero-point when the codec carries one) as
+            kwargs — in-kernel decode."""
+            msg_w = buf_w.reshape(-1, buf_w.shape[-1])[idx]
+            if not codec.quantized:
                 return msg_w, {}
             msc = buf_scale.reshape(-1)[idx]
-            mzp = buf_zp.reshape(-1)[idx]
+            mzp = buf_zp.reshape(-1)[idx] if codec.has_zp else None
             if use_pallas:
-                return msg_w, dict(msg_scale=msc, msg_zp=mzp)
-            return dequantize_wire(msg_w, msc, mzp), {}
+                extra = dict(msg_scale=msc)
+                if codec.has_zp:
+                    extra["msg_zp"] = mzp
+                return msg_w, extra
+            return codec.decode(msg_w, msc, mzp, d), {}
 
-        def send(buf_w, buf_scale, buf_zp, fresh_w, clock, kd):
-            """Refresh this cycle's buffer row (quantizing on the way in)."""
-            if not quantized:
-                return (buf_w.at[clock % D].set(fresh_w.astype(buf_w.dtype)),
-                        buf_scale, buf_zp)
+        def send(buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd, smask):
+            """Refresh this cycle's buffer row (encoding on the way in).
+
+            ``smask`` (the router's per-cycle ``arrival >= 0`` == the
+            reference engine's ``send_ok``) gates the EF-residual refresh;
+            it is only scanned when the codec keeps EF state."""
+            row = clock % D
+            x = fresh_w + ef if codec.ef else fresh_w
+            if not codec.quantized:
+                return (buf_w.at[row].set(x.astype(buf_w.dtype)),
+                        buf_scale, buf_zp, ef)
             key = None
-            if stochastic:
+            if codec.stochastic:
                 # k_recv: slot 0 of the reference engine's per-cycle split
                 key = jax.random.split(jax.random.wrap_key_data(kd), 4)[0]
             if use_send_kernel:
-                q, sc, zp = quantize_send(
+                outs = quantize_send(
                     fresh_w, wire,
-                    key_data=(jax.random.key_data(key) if stochastic
+                    key_data=(jax.random.key_data(key) if codec.stochastic
                               else None),
-                    interpret=interpret)
+                    ef=ef if codec.ef else None, interpret=interpret)
+                if codec.has_zp:
+                    q, sc, zp = outs
+                elif codec.ef:
+                    (q, sc), zp = outs[:2], None
+                    resid = outs[2]
+                else:
+                    (q, sc), zp = outs, None
             else:
-                q, sc, zp = quantize_wire(fresh_w, wire, key=key)
-            return (buf_w.at[clock % D].set(q),
-                    buf_scale.at[clock % D].set(sc),
-                    buf_zp.at[clock % D].set(zp))
+                q, sc, zp = codec.encode(x, key=key)
+                if codec.ef:
+                    resid = x - codec.decode(q, sc, zp, fresh_w.shape[-1])
+            if codec.ef:
+                ef = jnp.where(smask[:, None], resid, ef)
+            return (buf_w.at[row].set(q), buf_scale.at[row].set(sc),
+                    buf_zp.at[row].set(zp) if codec.has_zp else buf_zp, ef)
 
         def dense_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
-             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
-            (src_slot,), kd = inp
+             buf_w, buf_t, buf_scale, buf_zp, ef, clock) = carry
+            (src_slot, *sm), kd = inp
             valid = src_slot >= 0             # (K, n); -1 = no receive
             idx = jnp.maximum(src_slot, 0)
             n, d = last_w.shape
@@ -614,12 +645,13 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                 last_w, last_t, fresh_w, fresh_t,
                 ModelCache(cw, ct, ptr, cnt), msg_w, msg_t, valid, Xc, yc,
                 variant=variant, update=update, **extra)
-            buf_w, buf_scale, buf_zp = send(buf_w, buf_scale, buf_zp,
-                                            fresh_w, clock, kd)
+            buf_w, buf_scale, buf_zp, ef = send(
+                buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd,
+                sm[0] if sm else None)
             buf_t = buf_t.at[clock % D].set(fresh_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    clock + 1), None
+                    ef, clock + 1), None
 
         def subset_apply(state, ridx, rslot, Xc, yc, buf_w, buf_scale,
                          buf_zp, flat_t):
@@ -655,8 +687,8 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
 
         def compact_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
-             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
-            (src0, ridx, rslot), kd = inp
+             buf_w, buf_t, buf_scale, buf_zp, ef, clock) = carry
+            (src0, ridx, rslot, *sm), kd = inp
             n, d = last_w.shape
             Xc, yc = records(clock)
             flat_t = buf_t.reshape(-1)
@@ -673,66 +705,75 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
                 (last_w, last_t, fresh_w, fresh_t, cache), ridx, rslot,
                 Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
-            buf_w, buf_scale, buf_zp = send(buf_w, buf_scale, buf_zp,
-                                            fresh_w, clock, kd)
+            buf_w, buf_scale, buf_zp, ef = send(
+                buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd,
+                sm[0] if sm else None)
             buf_t = buf_t.at[clock % D].set(fresh_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    clock + 1), None
+                    ef, clock + 1), None
 
-        def send_compact(buf_w, buf_t, buf_scale, buf_zp, fresh_w, fresh_t,
-                         clock, kd, sidx):
+        def send_compact(buf_w, buf_t, buf_scale, buf_zp, ef, fresh_w,
+                         fresh_t, clock, kd, sidx):
             """Refresh only the SENDERS' slots of this cycle's buffer row.
 
             In sparse regimes most nodes are offline or drop their send;
             their slots keep stale payloads that the router provably never
             routes (only ``arrival >= 0`` messages enter the pending set),
-            so writing — and for int8, quantizing — just the ``sidx``
-            subset is exact. The "int8_sr" noise is regenerated at the
-            senders' positions (``sr_noise_for_rows``), bitwise-equal to
-            the dense ``jax.random.uniform`` draw at those rows."""
+            so writing — and for the quantized codecs, encoding — just the
+            ``sidx`` subset is exact. The "int8_sr" noise is regenerated at
+            the senders' positions (``sr_noise_for_rows``), bitwise-equal
+            to the dense ``jax.random.uniform`` draw at those rows; the
+            ``_ef`` codecs gather/refresh/scatter only the senders'
+            residual rows — exactly the rows the reference engine's
+            ``send_ok`` mask refreshes."""
             n, d = fresh_w.shape
             pad = sidx < 0
             gi = jnp.maximum(sidx, 0)
             si = jnp.where(pad, n, gi)        # out of bounds => dropped
             row = clock % D
-            sub_w = fresh_w[gi]
-            if not quantized:
+            sub_x = fresh_w[gi] + ef[gi] if codec.ef else fresh_w[gi]
+            if not codec.quantized:
                 buf_w = buf_w.at[row, si].set(
-                    sub_w.astype(buf_w.dtype), mode="drop")
+                    sub_x.astype(buf_w.dtype), mode="drop")
             else:
                 noise = None
-                if stochastic:
+                if codec.stochastic:
                     key = jax.random.split(
                         jax.random.wrap_key_data(kd), 4)[0]
                     noise = sr_noise_for_rows(key, gi, d, n)
-                q, sc, zp = quantize_wire(sub_w, wire, noise=noise)
+                q, sc, zp = codec.encode(sub_x, noise=noise)
+                if codec.ef:
+                    resid = sub_x - codec.decode(q, sc, zp, d)
+                    ef = ef.at[si].set(resid, mode="drop")
                 buf_w = buf_w.at[row, si].set(q, mode="drop")
                 buf_scale = buf_scale.at[row, si].set(sc, mode="drop")
-                buf_zp = buf_zp.at[row, si].set(zp, mode="drop")
+                if codec.has_zp:
+                    buf_zp = buf_zp.at[row, si].set(zp, mode="drop")
             buf_t = buf_t.at[row, si].set(fresh_t[gi], mode="drop")
-            return buf_w, buf_t, buf_scale, buf_zp
+            return buf_w, buf_t, buf_scale, buf_zp, ef
 
         def compact_all_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
-             buf_w, buf_t, buf_scale, buf_zp, clock) = carry
+             buf_w, buf_t, buf_scale, buf_zp, ef, clock) = carry
             (ridx, rslot, sidx), kd = inp
             Xc, yc = records(clock)
             flat_t = buf_t.reshape(-1)
             # every round over the round-1 receiver subset: non-receivers
             # are never touched, so per-cycle apply cost is
             # delivery-proportional (the sparse-delivery hot path) — and
-            # the send refresh is sender-proportional to match
+            # the send refresh (buffer slots AND EF residuals) is
+            # sender-proportional to match
             last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
                 (last_w, last_t, fresh_w, fresh_t,
                  ModelCache(cw, ct, ptr, cnt)), ridx, rslot,
                 Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
-            buf_w, buf_t, buf_scale, buf_zp = send_compact(
-                buf_w, buf_t, buf_scale, buf_zp, fresh_w, fresh_t, clock,
-                kd, sidx)
+            buf_w, buf_t, buf_scale, buf_zp, ef = send_compact(
+                buf_w, buf_t, buf_scale, buf_zp, ef, fresh_w, fresh_t,
+                clock, kd, sidx)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    clock + 1), None
+                    ef, clock + 1), None
 
         body = {"dense": dense_body, "compact": compact_body,
                 "compact_all": compact_all_body}[mode]
@@ -780,25 +821,30 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     for every chunk (benchmarks pin the PR 3 behavior with
     ``compact_mode="compact"``).
 
-    ``cfg.wire_dtype`` ("bf16"/"f16"/"int8"/"int8_sr") stores the
-    in-flight payload buffer — the engine's dominant memory — in the wire
-    dtype (the int8 dtypes add (D, N) f16 scale/zero-point lanes); merge
-    math stays f32 and the identical quantization is applied by the
-    reference engine, so cross-engine parity holds under quantization too,
-    including the stochastic-rounding noise (both engines draw it from the
-    same per-cycle ``k_recv`` threefry slot). ``use_send_kernel`` fuses the
-    send-side quantization into the Pallas ``quantize_send`` kernel
-    (default: with ``use_pallas`` on int8 wire dtypes, no mesh) — the
-    kernel reproduces ``quantize_wire`` bitwise, including the in-kernel
-    threefry draw of the "int8_sr" noise. Chunks running the
+    ``cfg.wire_dtype`` names a wire codec (``repro.core.wire_codec``:
+    "bf16"/"f16"/"int8"/"int8_sr"/"int4"/"int4_ef"/"ternary"/"ternary_ef")
+    and stores the in-flight payload buffer — the engine's dominant memory
+    — in the codec's packed representation (quantized codecs add the
+    (D, N) f16 scale lane, the affine int8 family a zero-point lane, the
+    ``_ef`` codecs the (N, d) f32 error-feedback residual); merge math
+    stays f32 and the identical encoding is applied by the reference
+    engine, so cross-engine parity holds under quantization too, including
+    the stochastic-rounding noise (both engines draw it from the same
+    per-cycle ``k_recv`` threefry slot) and the EF residual chain (updated
+    exactly on the reference engine's ``send_ok`` cycles — the
+    dense/compact bodies scan the router's send mask, ``compact_all``
+    refreshes the sender subset). ``use_send_kernel`` fuses the send-side
+    quantization into the Pallas ``quantize_send`` kernel (default: with
+    ``use_pallas`` on quantized codecs, no mesh) — the kernel reproduces
+    the jnp codec bitwise, including the in-kernel threefry draw of the
+    "int8_sr" noise and the packed codecs' EF residual. Chunks running the
     ``compact_all`` packing go one step further regardless of the flag:
-    they quantize only the sender subset (``sr_noise_for_rows`` keeps the
+    they encode only the sender subset (``sr_noise_for_rows`` keeps the
     noise positionally identical), which strictly dominates a
     full-population kernel pass."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
-    wdt = resolve_wire_dtype(cfg.wire_dtype)
-    buf_dtype = wdt or jnp.float32
+    codec = get_codec(cfg.wire_dtype)
     online_mat, eval_idx, X, y, X_test, y_test = sim_setup(
         cfg, X, y, X_test, y_test, cycles=cycles, seed=seed,
         eval_nodes=eval_nodes)
@@ -838,13 +884,13 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             raise ValueError("compacted rounds require the vector apply "
                              "(the Pallas receive kernel is dense)")
         compact_rounds = compact_mode != "dense"
-    quantized_wire = is_quantized_wire(cfg.wire_dtype)
     if use_send_kernel is None:
-        use_send_kernel = use_pallas and quantized_wire and mesh is None
+        use_send_kernel = use_pallas and codec.quantized and mesh is None
     elif use_send_kernel:
-        if not quantized_wire:
-            raise ValueError("use_send_kernel needs an int8 wire dtype "
-                             "(float wire dtypes send a plain cast)")
+        if not codec.quantized:
+            raise ValueError("use_send_kernel needs a quantized (int8 or "
+                             "sub-4-bit) wire dtype — float wire dtypes "
+                             "send a plain cast")
         if mesh is not None:
             raise ValueError("the Pallas send kernel does not run under a "
                              "node mesh")
@@ -855,23 +901,29 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                                cfg.wire_dtype, use_send_kernel)
 
     # data-plane carry: models + cache + payload lanes of the buffer (the
-    # int8 wire dtypes add the (D, N) f16 scale/zero-point lanes; empty
-    # (0, 0) arrays otherwise so the float paths carry nothing extra)
-    meta_shape = (D, n) if is_quantized_wire(cfg.wire_dtype) else (0, 0)
+    # quantized codecs add the (D, N) f16 scale lane — plus a zero-point
+    # lane for the affine int8 family — and the _ef codecs the (N, d) f32
+    # error-feedback residual; empty (0, 0) arrays otherwise so the float
+    # paths carry nothing extra)
+    sc_shape = (D, n) if codec.has_scale else (0, 0)
+    zp_shape = (D, n) if codec.has_zp else (0, 0)
     carry = (jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              jnp.zeros((n, d), jnp.float32), jnp.zeros((n,), jnp.int32),
              *cache_mod.init_cache(n, cfg.cache_size, d),
-             jnp.zeros((D, n, d), buf_dtype), jnp.zeros((D, n), jnp.int32),
-             jnp.zeros(meta_shape, jnp.float16),
-             jnp.zeros(meta_shape, jnp.float16),
+             jnp.zeros((D, n, codec.payload_cols(d)), codec.payload_dtype),
+             jnp.zeros((D, n), jnp.int32),
+             jnp.zeros(sc_shape, jnp.float16),
+             jnp.zeros(zp_shape, jnp.float16),
+             jnp.zeros((n, d) if codec.ef else (0, 0), jnp.float32),
              jnp.zeros((), jnp.int32))
     if node_sharding is not None:
-        put_n = lambda a: jax.device_put(a, node_sharding)
+        put_n = lambda a: (jax.device_put(a, node_sharding) if a.size
+                           else a)
         put_dn = lambda a: (jax.device_put(
             a, NamedSharding(mesh, PS(None, axis))) if a.size else a)
         carry = tuple(put_n(a) for a in carry[:8]) + (
             put_dn(carry[8]), put_dn(carry[9]), put_dn(carry[10]),
-            put_dn(carry[11]), carry[12])
+            put_dn(carry[11]), put_n(carry[12]), carry[13])
         X, y = put_n(X), put_n(y)
 
     res = SimResult([], [], [], [], 0, cfg)
@@ -980,6 +1032,12 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                       _pack_index_lists(senders(), n, ws, shards))
         else:
             tables = (dense_table(win, T, k_rounds, n),)
+        if codec.ef and mode != "compact_all":
+            # the EF residual refreshes exactly where the reference
+            # engine's send_ok holds == where a message entered the pending
+            # set; compact_all carries the same information as the packed
+            # sender list instead of a dense mask
+            tables = (*tables, an >= 0)
         return mode, tables, stats
 
     errs_pending = []
@@ -1017,4 +1075,5 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         multi_occupancy_max=float(mr.max()),
         packed_widths=dict(widths), shards=shards)
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
+    res.ef_residual_norm = ef_residual_norm(carry[12])
     return res

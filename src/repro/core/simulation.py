@@ -20,14 +20,15 @@ before it is overwritten), and simultaneous arrivals at one node are applied
 sequentially in K winner-per-destination rounds — matching the event-by-event
 semantics of the paper's simulator while staying fully vectorized.
 
-Beyond-paper: ``GossipLinearConfig.wire_dtype`` selects the wire
-representation of the transmitted model (bf16/f16 cast, or per-message
-affine int8 with optional stochastic rounding — see
-``repro.core.gossip_optimizer.quantize_wire``); merge arithmetic is always
-f32. This module is the *reference engine*; ``repro.core.sharded_engine``
-runs the identical protocol at mega-population scale (the engines' parity
-contract is documented in docs/ENGINES.md, the paper-to-code map in
-docs/ARCHITECTURE.md).
+Beyond-paper: ``GossipLinearConfig.wire_dtype`` names a wire *codec* from
+``repro.core.wire_codec`` — the representation of the transmitted model
+(bf16/f16 cast, per-message affine int8 with optional stochastic rounding,
+packed int4 or base-3 ternary, the latter two optionally with sender-side
+error-feedback residuals held in ``SimState.ef``); merge arithmetic is
+always f32. This module is the *reference engine*;
+``repro.core.sharded_engine`` runs the identical protocol at
+mega-population scale (the engines' parity contract is documented in
+docs/ENGINES.md, the paper-to-code map in docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -43,11 +44,8 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
-from repro.core.gossip_optimizer import (dequantize_wire, is_quantized_wire,
-                                         is_stochastic_wire,
-                                         resolve_wire_dtype, quantize_wire,
-                                         wire_itemsize, wire_overhead_bytes)
 from repro.core.learners import LinearModel, make_update
+from repro.core.wire_codec import get_codec
 from repro.core.merge import create_model
 from repro.utils.metrics import cosine_similarity
 
@@ -56,35 +54,44 @@ class SimState(NamedTuple):
     last_w: jnp.ndarray     # (N, d)  lastModel
     last_t: jnp.ndarray     # (N,)
     cache: ModelCache
-    buf_w: jnp.ndarray      # (D, N, d) in-flight payloads, slot = cycle % D
+    buf_w: jnp.ndarray      # (D, N, P) in-flight payloads, slot = cycle % D
+    #                         (P = codec.payload_cols(d): d for byte-or-wider
+    #                         codecs, ceil(d/2) packed int4, ceil(d/5) ternary)
     buf_t: jnp.ndarray      # (D, N)
-    buf_scale: jnp.ndarray  # (D, N) f16 per-message quant scale ((0, 0) when
-    buf_zp: jnp.ndarray     # (D, N) f16 per-message zero-point   not int8)
+    buf_scale: jnp.ndarray  # (D, N) f16 per-message quant scale  ((0, 0)
+    buf_zp: jnp.ndarray     # (D, N) f16 per-message zero-point    when the
+    #                         codec does not carry the lane)
     buf_dst: jnp.ndarray    # (D, N) int32 destination
     buf_arrival: jnp.ndarray  # (D, N) int32 absolute arrival cycle, -1 = none
+    ef: jnp.ndarray         # (N, d) f32 sender error-feedback residual
+    #                         ((0, 0) for codecs without EF state)
     clock: jnp.ndarray      # () int32
 
 
 def init_state(n: int, d: int, cache_size: int, delay_max: int,
                wire_dtype=None) -> SimState:
-    """``wire_dtype`` (name or None): wire dtype of the in-flight payload
-    buffer — the bytes a real deployment would put on the wire. The affine
-    int8 dtypes additionally allocate the (D, N) f16 scale/zero-point lanes
-    that ride alongside each message; for float wire dtypes those lanes are
-    empty (0, 0) arrays, so the non-quantized hot path is unchanged."""
-    quantized = is_quantized_wire(wire_dtype)
-    meta_shape = (delay_max, n) if quantized else (0, 0)
+    """``wire_dtype`` (codec name or None): wire representation of the
+    in-flight payload buffer — the bytes a real deployment would put on the
+    wire. The quantized codecs additionally allocate the (D, N) f16 scale
+    lane (and zero-point lane for the affine int8 family) that rides
+    alongside each message, and the ``_ef`` codecs the (N, d) f32
+    error-feedback residual; lanes a codec does not declare are empty
+    (0, 0) arrays, so the float hot path carries nothing extra."""
+    codec = get_codec(wire_dtype)
+    sc_shape = (delay_max, n) if codec.has_scale else (0, 0)
+    zp_shape = (delay_max, n) if codec.has_zp else (0, 0)
     return SimState(
         last_w=jnp.zeros((n, d), jnp.float32),
         last_t=jnp.zeros((n,), jnp.int32),
         cache=cache_mod.init_cache(n, cache_size, d),
-        buf_w=jnp.zeros((delay_max, n, d),
-                        resolve_wire_dtype(wire_dtype) or jnp.float32),
+        buf_w=jnp.zeros((delay_max, n, codec.payload_cols(d)),
+                        codec.payload_dtype),
         buf_t=jnp.zeros((delay_max, n), jnp.int32),
-        buf_scale=jnp.zeros(meta_shape, jnp.float16),
-        buf_zp=jnp.zeros(meta_shape, jnp.float16),
+        buf_scale=jnp.zeros(sc_shape, jnp.float16),
+        buf_zp=jnp.zeros(zp_shape, jnp.float16),
         buf_dst=jnp.zeros((delay_max, n), jnp.int32),
         buf_arrival=jnp.full((delay_max, n), -1, jnp.int32),
+        ef=jnp.zeros((n, d) if codec.ef else (0, 0), jnp.float32),
         clock=jnp.zeros((), jnp.int32),
     )
 
@@ -153,14 +160,17 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
                wire_dtype: Optional[str] = None):
     """One gossip cycle for the whole population (traceable core).
 
-    ``wire_dtype`` is the wire-dtype *name* (static): the affine int8 modes
-    quantize at send time and dequantize before the f32 merge; ``k_recv`` —
-    the first slot of the per-cycle 4-way threefry split, unused by the
-    float wire dtypes — seeds the stochastic-rounding noise, so "int8_sr"
-    stays bitwise-reproducible and both engines draw identical noise."""
+    ``wire_dtype`` is the wire-codec *name* (static): quantized codecs
+    encode at send time and decode before the f32 merge; ``k_recv`` — the
+    first slot of the per-cycle 4-way threefry split, unused by the float
+    wire dtypes — seeds the stochastic-rounding noise, so "int8_sr" stays
+    bitwise-reproducible and both engines draw identical noise. The
+    ``_ef`` codecs transmit ``fresh + ef`` and update the per-sender
+    residual — only on cycles the node actually sends (``send_ok``), which
+    is what keeps the sharded engine's sender-subset compaction exact."""
     n, d = state.last_w.shape
     D = delay_max
-    quantized = is_quantized_wire(wire_dtype)
+    codec = get_codec(wire_dtype)
     update = make_update(learner, lam=lam, eta=eta)
     k_recv, k_dst, k_delay, k_drop = jax.random.split(key, 4)
 
@@ -175,14 +185,14 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     # ---- 1) deliveries -----------------------------------------------------
     src_slot, valid, delivered, overflow, lost = select_receivers(
         state.buf_dst, state.buf_arrival, online, state.clock, k_rounds)
-    flat_w = state.buf_w.reshape(-1, d)
+    flat_w = state.buf_w.reshape(-1, state.buf_w.shape[-1])
     flat_t = state.buf_t.reshape(-1)
-    # payloads were quantized to the wire dtype at send time; the merge
+    # payloads were encoded to the wire codec at send time; the merge
     # arithmetic runs in f32 (same contract as gossip_merge exchange_dtype)
-    if quantized:
-        msg_w = dequantize_wire(flat_w[src_slot],
-                                state.buf_scale.reshape(-1)[src_slot],
-                                state.buf_zp.reshape(-1)[src_slot])
+    if codec.quantized:
+        msg_w = codec.decode(
+            flat_w[src_slot], state.buf_scale.reshape(-1)[src_slot],
+            state.buf_zp.reshape(-1)[src_slot] if codec.has_zp else None, d)
     else:
         msg_w = flat_w[src_slot].astype(jnp.float32)  # (K, N, d) winners
     msg_t = flat_t[src_slot]
@@ -205,16 +215,20 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     arrival = jnp.where(send_ok, state.clock + delay, -1)
 
     slot = state.clock % D
-    if quantized:
-        q, sc, zp = quantize_wire(
-            fresh_w, wire_dtype,
-            key=k_recv if is_stochastic_wire(wire_dtype) else None)
-        buf_w = state.buf_w.at[slot].set(q)
-        buf_scale = state.buf_scale.at[slot].set(sc)
-        buf_zp = state.buf_zp.at[slot].set(zp)
-    else:
-        buf_w = state.buf_w.at[slot].set(fresh_w.astype(state.buf_w.dtype))
-        buf_scale, buf_zp = state.buf_scale, state.buf_zp
+    # error feedback: transmit fresh + residual; the residual refreshes
+    # only where the node actually sends (a non-sender encoded nothing,
+    # and its stale buffer slot is provably never routed)
+    x_send = fresh_w + state.ef if codec.ef else fresh_w
+    payload, sc, zp = codec.encode(
+        x_send, key=k_recv if codec.stochastic else None)
+    buf_w = state.buf_w.at[slot].set(payload)
+    buf_scale = (state.buf_scale.at[slot].set(sc) if codec.has_scale
+                 else state.buf_scale)
+    buf_zp = state.buf_zp.at[slot].set(zp) if codec.has_zp else state.buf_zp
+    ef = state.ef
+    if codec.ef:
+        ef = jnp.where(send_ok[:, None],
+                       x_send - codec.decode(payload, sc, zp, d), ef)
     buf_t = state.buf_t.at[slot].set(fresh_t)
     buf_dst = state.buf_dst.at[slot].set(dst)
     buf_arrival = state.buf_arrival.at[slot].set(arrival)
@@ -222,7 +236,7 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     stats = {"delivered": delivered, "overflow": overflow,
              "sent": send_ok.sum(), "lost": lost}
     return SimState(last_w, last_t, cache, buf_w, buf_t, buf_scale, buf_zp,
-                    buf_dst, buf_arrival, state.clock + 1), stats
+                    buf_dst, buf_arrival, ef, state.clock + 1), stats
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "learner", "lam",
@@ -363,22 +377,39 @@ class SimResult:
     # observed (round-1 receivers and multi-receivers as fractions of N)
     delivered_per_cycle: List[int] = field(default_factory=list)
     compaction: Dict[str, object] = field(default_factory=dict)
+    # terminal sender-state telemetry of the error-feedback codecs: the
+    # root-mean L2 norm of the per-node EF residual at the end of the run
+    # (0.0 for codecs without EF state) — bounded (property-tested) because
+    # each refresh leaves at most one quantization step behind
+    ef_residual_norm: float = 0.0
+
+
+def ef_residual_norm(ef) -> float:
+    """Root-mean-square per-node L2 norm of the EF residual lane — the
+    one number both engines report as ``SimResult.ef_residual_norm``."""
+    if ef.size == 0:
+        return 0.0
+    return float(jnp.sqrt(jnp.mean(jnp.sum(ef.astype(jnp.float32) ** 2,
+                                           axis=-1))))
 
 
 def message_wire_bytes(d: int, wire_dtype_name) -> int:
-    """Bytes per transmitted model: d coefficients + the int32 counter,
-    plus the f16 scale/zero-point pair for the affine int8 wire dtypes."""
-    return (d * wire_itemsize(wire_dtype_name) + 4
-            + wire_overhead_bytes(wire_dtype_name))
+    """Bytes per transmitted model: the codec's packed coefficient payload
+    + the int32 counter + the codec's metadata overhead (f16 scale, and a
+    zero-point for the affine int8 family)."""
+    codec = get_codec(wire_dtype_name)
+    return codec.payload_bytes(d) + 4 + codec.overhead_bytes
 
 
 def payload_buffer_bytes(delay_max: int, n: int, d: int,
                          wire_dtype_name) -> int:
-    """Footprint of the in-flight (D, N, d) payload buffer in the wire
-    dtype, including the (D, N) f16 scale/zero-point lanes when quantized
-    — the number both engines report as ``SimResult.buf_payload_bytes``."""
-    return delay_max * n * (d * wire_itemsize(wire_dtype_name)
-                            + wire_overhead_bytes(wire_dtype_name))
+    """Footprint of the in-flight (D, N, P) payload buffer in the wire
+    codec's packed representation, including the (D, N) f16 scale (and
+    zero-point) lanes when the codec carries them — the number both
+    engines report as ``SimResult.buf_payload_bytes``. (The EF residual is
+    *sender* state, not in-flight payload, and is excluded.)"""
+    codec = get_codec(wire_dtype_name)
+    return delay_max * n * (codec.payload_bytes(d) + codec.overhead_bytes)
 
 
 @functools.lru_cache(maxsize=2)
@@ -513,4 +544,5 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             res.err_voted.append(float(err_v))
             res.similarity.append(float(sim))
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
+    res.ef_residual_norm = ef_residual_norm(state.ef)
     return res

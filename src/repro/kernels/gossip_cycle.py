@@ -13,18 +13,23 @@ O(K·(C+3)·d) to the minimal read-once/write-once O((K+C+2)·d).
 
 Supports the three CREATEMODEL variants (RW / MU / UM, Algorithm 2) with the
 Pegasos update — the paper's P2Pegasos hot path. Message operands may arrive
-in any wire dtype (f32/bf16/f16 upcast in VMEM; affine int8 dequantized
-in VMEM from per-message f16 scale/zero-point), so HBM message traffic is
-paid at wire precision. The pure-jnp oracle is
-``repro.core.simulation.apply_receives``; parity is tested in interpret mode
-on CPU (tests/test_sharded_engine.py).
+in any wire codec (f32/bf16/f16 upcast in VMEM; affine int8 dequantized
+in VMEM from per-message f16 scale/zero-point; packed int4 nibbles and
+base-3 ternary trits unpacked AND dequantized in VMEM from a per-message
+f16 scale), so HBM message traffic is paid at wire precision — half a byte
+(int4) or a fifth of a byte (ternary) per coefficient. The pure-jnp oracle
+is ``repro.core.simulation.apply_receives``; parity is tested in interpret
+mode on CPU (tests/test_sharded_engine.py, tests/test_wire_codec.py).
 
 This module also holds the send-side counterpart, ``quantize_send``: the
-per-message affine int8 quantization (``gossip_optimizer.quantize_wire``)
-as one fused pass per node block, with the "int8_sr" stochastic-rounding
-uniform generated *in kernel* by an op-exact threefry-2x32 — bitwise equal
-to the ``jax.random.uniform`` draw of the jnp path, which the engines'
-parity contract requires (tests/test_send_kernel.py).
+per-message encode of any quantized wire codec
+(``repro.core.wire_codec``) as one fused pass per node block — affine int8
+with the "int8_sr" stochastic-rounding uniform generated *in kernel* by an
+op-exact threefry-2x32 (bitwise equal to the ``jax.random.uniform`` draw
+of the jnp path, which the engines' parity contract requires), and the
+packed sub-4-bit codecs with the code packing and the error-feedback
+residual update (``(w + ef) - decode(encode(w + ef))``) fused into the
+same pass (tests/test_send_kernel.py).
 """
 from __future__ import annotations
 
@@ -35,9 +40,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-# The threefry-2x32 cipher and the counter-at-position uniform it feeds
-# live in repro.core.gossip_optimizer (shared with the compacted send path);
-# they are pure jnp integer ops, so they trace inside the kernel body too.
+# The threefry-2x32 cipher, the counter-at-position uniform it feeds and
+# the sub-4-bit pack/unpack helpers live in repro.core.wire_codec (shared
+# with the jnp codecs and the compacted send path); they are pure jnp
+# integer ops, so they trace inside the kernel body too — and integer ops
+# are exact, so kernel and jnp paths agree bitwise by construction.
 #
 # Why not ``pltpu.prng_random_bits``: the TPU-native PRNG is a *different*
 # generator — its stream cannot match the ``jax.random.uniform`` draw the
@@ -45,7 +52,9 @@ from jax.experimental import pallas as pl
 # engines' parity contract requires bitwise-identical stochastic-rounding
 # noise everywhere. Threefry is 20 rounds of uint32 add/rotate/xor on the
 # VPU — cheap relative to the (N, d) HBM traffic this kernel saves.
-from repro.core.gossip_optimizer import uniform_at as _uniform_at
+from repro.core.wire_codec import (get_codec, symmetric_scale,
+                                   unpack_int4, unpack_ternary)
+from repro.core.wire_codec import uniform_at as _uniform_at
 from repro.kernels.pegasos_update import BLK_N, LANE, _pad_to
 
 C_SUB = 8          # pad the cache axis to the f32 sublane multiple
@@ -62,15 +71,36 @@ def _pegasos(w, t, x, y, lam: float):
     return decay * w + upd, t
 
 
+def _decode_msg(raw, msc, mzp, dp: int, wire_mode: str):
+    """In-VMEM wire decode of one round's message block.
+
+    ``raw``: the (BLK, P) payload block as stored (float cast, int8 codes,
+    or packed uint8 bytes); returns the (BLK, dp) f32 coefficients. The
+    float expressions repeat ``wire_codec``'s decode op order exactly
+    (cast-then-multiply-then-add), and the sub-4-bit unpacks ARE the shared
+    ``unpack_int4``/``unpack_ternary`` helpers (integer-exact), so kernel
+    and jnp paths agree bitwise. Packed payload pad bytes decode to finite
+    garbage in lanes >= d, which the caller's padding contract discards."""
+    if wire_mode == "float":
+        return raw.astype(jnp.float32)
+    if wire_mode == "affine8":
+        return (raw.astype(jnp.float32) * msc.astype(jnp.float32)[:, None]
+                + mzp.astype(jnp.float32)[:, None])
+    unpack = {"int4": unpack_int4, "ternary": unpack_ternary}[wire_mode]
+    q = unpack(raw, dp)                            # (BLK, dp) int32 codes
+    return q.astype(jnp.float32) * msc.astype(jnp.float32)[:, None]
+
+
 def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
                   y_ref, last_w_ref, last_t_ref, cw_ref, ct_ref, ptr_ref,
                   cnt_ref, out_lw, out_lt, out_cw, out_ct, out_ptr, out_cnt,
-                  *, variant: str, lam: float, c_real: int, k_rounds: int):
+                  *, variant: str, lam: float, c_real: int, k_rounds: int,
+                  wire_mode: str = "float"):
     """``msc_ref``/``mzp_ref`` are the per-message f16 scale/zero-point of
-    the affine int8 wire dtypes (None when the payload is float): messages
-    stream into VMEM as one byte per coefficient and are dequantized here —
-    the same ``q * scale + zp`` expression (and op order) as
-    ``gossip_optimizer.dequantize_wire``, so kernel and jnp paths agree."""
+    the quantized wire codecs (None lanes when the codec does not carry
+    them): messages stream into VMEM at wire precision and are decoded by
+    :func:`_decode_msg` — same expressions (and op order) as the
+    ``repro.core.wire_codec`` decoders, so kernel and jnp paths agree."""
     lw = last_w_ref[...].astype(jnp.float32)       # (BLK, d)
     lt = last_t_ref[...]                           # (BLK,)
     cw = cw_ref[...].astype(jnp.float32)           # (BLK, C_pad, d)
@@ -80,13 +110,14 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
     x = x_ref[...].astype(jnp.float32)
     y = y_ref[...].astype(jnp.float32)
     blk, c_pad = ct.shape
+    dp = lw.shape[1]
 
     for kk in range(k_rounds):
         vm = valid_ref[kk, :] > 0                  # (BLK,) receives this round
-        mw = msg_w_ref[kk, :, :].astype(jnp.float32)
-        if msc_ref is not None:                    # in-VMEM dequant
-            mw = (mw * msc_ref[kk, :].astype(jnp.float32)[:, None]
-                  + mzp_ref[kk, :].astype(jnp.float32)[:, None])
+        mw = _decode_msg(msg_w_ref[kk, :, :],
+                         msc_ref[kk, :] if msc_ref is not None else None,
+                         mzp_ref[kk, :] if mzp_ref is not None else None,
+                         dp, wire_mode)
         mt = msg_t_ref[kk, :]
         if variant == "mu":                        # update(merge(m, last))
             nw, nt = _pegasos((mw + lw) / 2.0, jnp.maximum(mt, lt), x, y, lam)
@@ -121,28 +152,59 @@ def _kernel_no_meta(msg_w_ref, msg_t_ref, valid_ref, *rest, **kw):
     _cycle_kernel(msg_w_ref, msg_t_ref, None, None, valid_ref, *rest, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "lam", "interpret"))
+def _kernel_scale_only(msg_w_ref, msg_t_ref, msc_ref, valid_ref, *rest,
+                       **kw):
+    """Adapter for the packed symmetric codecs: scale lane, no zero-point."""
+    _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, None, valid_ref, *rest,
+                  **kw)
+
+
+def _wire_mode(wire, msg_scale, msg_zp) -> str:
+    """The kernel's static decode mode for a wire-codec name (legacy
+    callers that pass scale/zero-point without a name mean affine int8;
+    a scale WITHOUT a name or zero-point is ambiguous — the packed codecs
+    must name themselves, so silently decoding as float would corrupt the
+    merge: refuse instead)."""
+    if wire is not None:
+        codec = get_codec(wire)
+        if not codec.quantized:
+            return "float"
+        if codec.has_zp:
+            return "affine8"
+        return "int4" if codec.group == 2 else "ternary"
+    if msg_scale is not None and msg_zp is not None:
+        return "affine8"
+    if msg_scale is not None:
+        raise ValueError("msg_scale without msg_zp needs an explicit "
+                         "wire= codec name (scale-only codecs are packed)")
+    return "float"
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "lam", "interpret",
+                                             "wire"))
 def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
                         msg_w, msg_t, valid, x, y, *, msg_scale=None,
-                        msg_zp=None, variant: str, lam: float,
+                        msg_zp=None, wire=None, variant: str, lam: float,
                         interpret: bool = False):
     """Fused K-receive apply for one cycle.
 
-    last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, d);
+    last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, P);
     msg_t, valid: (K, N) int32; returns the updated
     (last_w, last_t, cache_w, cache_t, ptr, count).
 
-    ``msg_w`` may arrive in a reduced wire dtype (the simulator's in-flight
-    buffer under ``cfg.wire_dtype``): bf16/f16 are upcast in VMEM; int8
-    payloads additionally pass their per-message f16 ``msg_scale``/
-    ``msg_zp`` (K, N) and are affine-dequantized in VMEM. Either way HBM
-    message traffic is paid at wire precision. The node block widens to the
-    minimum sublane tile of the wire dtype (16 for 2-byte, 32 for 1-byte
-    operands)."""
+    ``msg_w`` may arrive in any wire codec's payload representation (the
+    simulator's in-flight buffer under ``cfg.wire_dtype``, named by the
+    static ``wire``): bf16/f16 are upcast in VMEM; int8 payloads pass their
+    per-message f16 ``msg_scale``/``msg_zp`` (K, N) and are
+    affine-dequantized in VMEM; packed int4/ternary payloads (P = the
+    codec's packed byte width) pass ``msg_scale`` only and are
+    unpacked-and-dequantized in VMEM. Either way HBM message traffic is
+    paid at wire precision. The node block widens to the minimum sublane
+    tile of the payload dtype (16 for 2-byte, 32 for 1-byte operands)."""
     n, d = last_w.shape
     _, c, _ = cache_w.shape
     k = msg_w.shape[0]
-    quantized = msg_scale is not None
+    mode = _wire_mode(wire, msg_scale, msg_zp)
     blk = max(BLK_N, 32 // jnp.dtype(msg_w.dtype).itemsize)
 
     pad_nd = lambda a: _pad_to(_pad_to(a, LANE, 1), blk, 0)
@@ -157,23 +219,32 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
     vl = _pad_to(valid, blk, 1)
     np_, dp = lw.shape
     cp = cwp.shape[1]
+    mp = mw.shape[2]                  # payload width (== dp unless packed)
+    if mode in ("int4", "ternary"):
+        # every real coefficient lane must be coverable from the padded
+        # payload block (codes-per-byte × padded bytes >= padded d)
+        assert mp * get_codec(wire).group >= dp, (mp, dp, wire)
     grid = (np_ // blk,)
 
     vec = pl.BlockSpec((blk, dp), lambda i: (i, 0))
     sca = pl.BlockSpec((blk,), lambda i: (i,))
-    kvec = pl.BlockSpec((k, blk, dp), lambda i: (0, i, 0))
+    kvec = pl.BlockSpec((k, blk, mp), lambda i: (0, i, 0))
     ksca = pl.BlockSpec((k, blk), lambda i: (0, i))
     cvec = pl.BlockSpec((blk, cp, dp), lambda i: (i, 0, 0))
     csca = pl.BlockSpec((blk, cp), lambda i: (i, 0))
 
-    if quantized:
-        kernel = functools.partial(_cycle_kernel, variant=variant, lam=lam,
-                                   c_real=c, k_rounds=k)
+    kw = dict(variant=variant, lam=lam, c_real=c, k_rounds=k,
+              wire_mode=mode)
+    if mode == "affine8":
+        kernel = functools.partial(_cycle_kernel, **kw)
         meta_args = (_pad_to(msg_scale, blk, 1), _pad_to(msg_zp, blk, 1))
         meta_specs = [ksca, ksca]
+    elif mode in ("int4", "ternary"):
+        kernel = functools.partial(_kernel_scale_only, **kw)
+        meta_args = (_pad_to(msg_scale, blk, 1),)
+        meta_specs = [ksca]
     else:
-        kernel = functools.partial(_kernel_no_meta, variant=variant, lam=lam,
-                                   c_real=c, k_rounds=k)
+        kernel = functools.partial(_kernel_no_meta, **kw)
         meta_args = ()
         meta_specs = []
 
@@ -237,46 +308,136 @@ def _send_kernel(key_ref, w_ref, q_out, sc_out, zp_out, *, n_real: int,
     zp_out[...] = zp
 
 
-@functools.partial(jax.jit, static_argnames=("name", "interpret"))
-def quantize_send(w, name: str, key_data=None, *, interpret: bool = False):
-    """Fused send-side quantization: ``quantize_wire`` as one Pallas pass.
+def _pack_send_kernel(w_ref, ef_ref, q_out, sc_out, res_out, *, d_real: int,
+                      qmax: int, pack, cols: int):
+    """Packed symmetric send: symmetric f16 scale over the real lanes,
+    round-to-nearest codes, in-kernel packing (the shared ``wire_codec``
+    pack helper — integer-exact, so kernel bytes == jnp bytes), and the
+    fused error-feedback residual ``x - q·scale`` when ``ef_ref``/
+    ``res_out`` are wired. Padded lanes hold zeros (both ``w`` and ``ef``
+    pad with 0), so they quantize to code 0 — exactly the pad code of the
+    jnp pack — and the packed pad bytes beyond the real width are sliced
+    off by the caller."""
+    x = w_ref[...].astype(jnp.float32)             # (BLK, dp)
+    if ef_ref is not None:
+        x = x + ef_ref[...].astype(jnp.float32)
+    blk, dp = x.shape
+    lane = lax.broadcasted_iota(jnp.int32, (blk, dp), 1)
+    real = lane < d_real
+    # |pad| = 0 never raises the per-message max, so the masked reduction
+    # equals the jnp codec's reduction over exactly the real lanes
+    scale, sf = symmetric_scale(jnp.where(real, x, 0.0), qmax)
+    q = jnp.clip(jnp.round(x / sf[:, None]), -qmax, qmax).astype(jnp.int32)
+    packed = pack(q)                               # (BLK, ceil(dp/group))
+    g = packed.shape[-1]
+    if g < cols:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((blk, cols - g), jnp.uint8)], axis=-1)
+    q_out[...] = packed
+    sc_out[...] = scale
+    if res_out is not None:
+        res_out[...] = x - q.astype(jnp.float32) * scale.astype(
+            jnp.float32)[:, None]
 
-    ``w``: (N, d) f32 fresh models; returns ``(q, scale, zp)`` bitwise
-    equal to ``quantize_wire(w, name, key)`` — including the "int8_sr"
-    stochastic-rounding draw, whose threefry uniform is generated *inside*
-    the kernel from ``key_data`` (= ``jax.random.key_data(k_recv)``, the
-    same per-cycle key slot both engines use). This closes the last dense
-    f32 pass of the send path: the jnp quantizer materializes the range
-    reductions, the scaled quotient and the noise as separate (N, d)
+
+def _pack_send_ef(w_ref, ef_ref, q_out, sc_out, res_out, **kw):
+    _pack_send_kernel(w_ref, ef_ref, q_out, sc_out, res_out, **kw)
+
+
+def _pack_send_plain(w_ref, q_out, sc_out, **kw):
+    _pack_send_kernel(w_ref, None, q_out, sc_out, None, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "interpret"))
+def quantize_send(w, name: str, key_data=None, ef=None, *,
+                  interpret: bool = False):
+    """Fused send-side quantization: the wire codec's encode as one Pallas
+    pass per node block.
+
+    ``w``: (N, d) f32 fresh models. For the affine int8 codecs returns
+    ``(q, scale, zp)`` bitwise equal to ``quantize_wire(w, name, key)`` —
+    including the "int8_sr" stochastic-rounding draw, whose threefry
+    uniform is generated *inside* the kernel from ``key_data``
+    (= ``jax.random.key_data(k_recv)``, the same per-cycle key slot both
+    engines use). For the packed sub-4-bit codecs returns
+    ``(payload, scale)`` — or ``(payload, scale, resid)`` when ``ef`` (the
+    (N, d) f32 error-feedback accumulator) is passed: the kernel encodes
+    ``w + ef``, packs the codes in VMEM and emits the EF residual
+    ``(w + ef) - decode(...)`` from the same pass, bitwise equal to the
+    jnp ``codec.encode``/``decode`` chain (the caller applies the
+    send-mask ``where`` to the residual). This closes the last dense f32
+    pass of the send path: the jnp encoder materializes the range
+    reductions, the scaled quotient and the noise/codes as separate (N, d)
     HBM-resident intermediates, the kernel streams each node block through
-    VMEM once and writes int8 codes + two f16 scalars."""
-    from repro.core.gossip_optimizer import INT8_QMAX, is_stochastic_wire
+    VMEM once and writes the packed codes + f16 scalars."""
+    from repro.core.wire_codec import INT8_QMAX
 
     n, d = w.shape
-    stochastic = is_stochastic_wire(name)
-    if stochastic and key_data is None:
-        raise ValueError("int8_sr quantization needs key_data")
-    kd = (jnp.asarray(key_data, jnp.uint32).reshape(2) if stochastic
-          else jnp.zeros((2,), jnp.uint32))
+    codec = get_codec(name)
     wp = _pad_to(_pad_to(w.astype(jnp.float32), LANE, 1), SEND_BLK, 0)
     np_, dp = wp.shape
     grid = (np_ // SEND_BLK,)
 
-    from jax.experimental.pallas import tpu as pltpu
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+    if codec.has_zp:                  # affine int8 family
+        if ef is not None:
+            raise ValueError(f"{name!r} keeps no error-feedback state — "
+                             "ef is only accepted by the _ef codecs")
+        stochastic = codec.stochastic
+        if stochastic and key_data is None:
+            raise ValueError("int8_sr quantization needs key_data")
+        kd = (jnp.asarray(key_data, jnp.uint32).reshape(2) if stochastic
+              else jnp.zeros((2,), jnp.uint32))
+
+        from jax.experimental.pallas import tpu as pltpu
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0))],
+            out_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0)),
+                       pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,)),
+                       pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,))])
+        q, sc, zp = pl.pallas_call(
+            functools.partial(_send_kernel, n_real=n, d_real=d,
+                              qmax=INT8_QMAX, stochastic=stochastic),
+            grid_spec=grid_spec,
+            out_shape=[jax.ShapeDtypeStruct((np_, dp), jnp.int8),
+                       jax.ShapeDtypeStruct((np_,), jnp.float16),
+                       jax.ShapeDtypeStruct((np_,), jnp.float16)],
+            interpret=interpret,
+        )(kd, wp)
+        return q[:n, :d], sc[:n], zp[:n]
+
+    if not codec.quantized:
+        raise ValueError(f"quantize_send needs a quantized wire codec, "
+                         f"got {name!r}")
+
+    cols = codec.payload_cols(d)
+    colsp = -(-cols // LANE) * LANE
+    assert colsp >= -(-dp // codec.group), (colsp, dp, name)
+    kw = dict(d_real=d, qmax=codec.qmax, pack=codec._pack, cols=colsp)
+    blkvec = pl.BlockSpec((SEND_BLK, dp), lambda i: (i, 0))
+    qvec = pl.BlockSpec((SEND_BLK, colsp), lambda i: (i, 0))
+    sca = pl.BlockSpec((SEND_BLK,), lambda i: (i,))
+    if ef is not None:
+        efp = _pad_to(_pad_to(ef.astype(jnp.float32), LANE, 1), SEND_BLK, 0)
+        q, sc, resid = pl.pallas_call(
+            functools.partial(_pack_send_ef, **kw),
+            grid=grid,
+            in_specs=[blkvec, blkvec],
+            out_specs=[qvec, sca, blkvec],
+            out_shape=[jax.ShapeDtypeStruct((np_, colsp), jnp.uint8),
+                       jax.ShapeDtypeStruct((np_,), jnp.float16),
+                       jax.ShapeDtypeStruct((np_, dp), jnp.float32)],
+            interpret=interpret,
+        )(wp, efp)
+        return q[:n, :cols], sc[:n], resid[:n, :d]
+    q, sc = pl.pallas_call(
+        functools.partial(_pack_send_plain, **kw),
         grid=grid,
-        in_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0))],
-        out_specs=[pl.BlockSpec((SEND_BLK, dp), lambda i, *_: (i, 0)),
-                   pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,)),
-                   pl.BlockSpec((SEND_BLK,), lambda i, *_: (i,))])
-    q, sc, zp = pl.pallas_call(
-        functools.partial(_send_kernel, n_real=n, d_real=d, qmax=INT8_QMAX,
-                          stochastic=stochastic),
-        grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((np_, dp), jnp.int8),
-                   jax.ShapeDtypeStruct((np_,), jnp.float16),
+        in_specs=[blkvec],
+        out_specs=[qvec, sca],
+        out_shape=[jax.ShapeDtypeStruct((np_, colsp), jnp.uint8),
                    jax.ShapeDtypeStruct((np_,), jnp.float16)],
         interpret=interpret,
-    )(kd, wp)
-    return q[:n, :d], sc[:n], zp[:n]
+    )(wp)
+    return q[:n, :cols], sc[:n]

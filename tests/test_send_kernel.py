@@ -104,8 +104,53 @@ def test_send_kernel_argument_validation():
     X, y = make_linear_dataset(rng, 32 + 16, 8, noise=0.05)
     cfg = GossipLinearConfig(name="v", dim=8, n_nodes=32, n_test=16,
                              class_ratio=(1, 1))
-    with pytest.raises(ValueError, match="int8 wire dtype"):
+    with pytest.raises(ValueError, match="quantized"):
         run_simulation(cfg, X[:32], y[:32], X[32:], y[32:], cycles=2,
                        engine="sharded", use_send_kernel=True)
     with pytest.raises(ValueError, match="needs key_data"):
         quantize_send(jnp.zeros((4, 4)), "int8_sr", interpret=True)
+    with pytest.raises(ValueError, match="quantized wire codec"):
+        quantize_send(jnp.zeros((4, 4)), "bf16", interpret=True)
+
+
+@pytest.mark.parametrize("wire", ["int4", "ternary"])
+@pytest.mark.parametrize("n,d", [(64, 10), (33, 7), (1, 1), (96, 57),
+                                 (40, 128), (7, 130)])
+def test_quantize_send_matches_codec_encode_packed(wire, n, d):
+    """The packed sub-4-bit codecs: in-kernel symmetric scale, code pack
+    and (with ``ef``) the fused EF residual must all equal the jnp codec
+    chain bit for bit — including odd d (half-filled final byte) and the
+    d > 128 multi-lane-tile case."""
+    from repro.core.wire_codec import get_codec
+
+    codec = get_codec(wire)
+    w = rand_w(n, d, seed=n + d)
+    p0, s0, _ = codec.encode(w)
+    p1, s1 = quantize_send(w, wire, interpret=True)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    # fused EF pass: encode(w + ef) + residual, vs the jnp chain
+    ef = rand_w(n, d, seed=n + d + 1) * 0.1
+    x = w + ef
+    p2, s2, _ = codec.encode(x)
+    resid = x - codec.decode(p2, s2, None, d)
+    p3, s3, r3 = quantize_send(w, wire, ef=ef, interpret=True)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p3))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s3))
+    np.testing.assert_array_equal(np.asarray(resid), np.asarray(r3))
+
+
+def test_quantize_send_packed_degenerate_rows():
+    """Constant, zero and f16-saturating rows take the same guarded paths
+    as the jnp codec."""
+    from repro.core.wire_codec import get_codec
+
+    w = jnp.stack([jnp.full((16,), 3.25), jnp.zeros((16,)),
+                   jnp.linspace(-7e4, 7e4, 16)]).astype(jnp.float32)
+    for wire in ("int4", "ternary"):
+        codec = get_codec(wire)
+        p0, s0, _ = codec.encode(w)
+        p1, s1 = quantize_send(w, wire, interpret=True)
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))

@@ -315,6 +315,20 @@ _MESH_SCRIPT = textwrap.dedent("""
     for a, b in zip(ref8.err_fresh, sh8.err_fresh):
         assert abs(a - b) <= 0.02, (ref8.err_fresh, sh8.err_fresh)
     assert ref8.sent_total == sh8.sent_total
+
+    # packed int4 + error feedback under node sharding: the packed (D, N,
+    # ceil(d/2)) payload, the scale lane AND the (N, d) EF residual all
+    # shard over the node axis; the residual telemetry matches the
+    # reference engine exactly
+    cfg4 = dataclasses.replace(cfg, wire_dtype="int4_ef")
+    ref4 = run_simulation(cfg4, Xtr, ytr, Xt, yt, **kw)
+    sh4 = run_simulation(cfg4, Xtr, ytr, Xt, yt, engine="sharded",
+                         mesh=mesh, **kw)
+    for a, b in zip(ref4.err_fresh, sh4.err_fresh):
+        assert abs(a - b) <= 0.02, (ref4.err_fresh, sh4.err_fresh)
+    assert ref4.sent_total == sh4.sent_total
+    assert abs(ref4.ef_residual_norm - sh4.ef_residual_norm) \\
+        <= 1e-6 * max(ref4.ef_residual_norm, 1.0)
     print("MESH_PARITY_OK")
 """)
 

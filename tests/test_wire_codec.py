@@ -1,0 +1,384 @@
+"""Wire-codec subsystem: registry properties, sub-4-bit pack/unpack
+bit-exactness, error-feedback accumulator boundedness, and the bitwise
+cross-engine/kernel parity contract for every registered codec.
+
+The codec contract (``repro.core.wire_codec``): the *transmitted* model is
+encoded — per message, with f16 scale metadata riding along — and every
+merge runs in f32 on the decoded values. The ``_ef`` codecs add sender-side
+error-feedback residual state that the engines thread as protocol state;
+these tests pin its boundedness and its bitwise agreement across the
+reference engine, both sharded packings and the Pallas interpret paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gossip_linear import GossipLinearConfig
+from repro.core.gossip_optimizer import gossip_merge
+from repro.core.simulation import (ef_residual_norm, message_wire_bytes,
+                                   payload_buffer_bytes, run_simulation)
+from repro.core.wire_codec import (INT4_QMAX, WIRE_CODECS, deterministic_codec,
+                                   get_codec, pack_int4, pack_ternary,
+                                   unpack_int4, unpack_ternary)
+from repro.data.synthetic import make_linear_dataset
+
+QUANTIZED = [n for n, c in WIRE_CODECS.items() if c.quantized]
+PACKED = ["int4", "int4_ef", "ternary", "ternary_ef"]
+EF = [n for n, c in WIRE_CODECS.items() if c.ef]
+
+
+def small_cfg(n_nodes=128, **kw):
+    base = dict(name="toy", dim=16, n_nodes=n_nodes, n_test=64,
+                class_ratio=(1, 1), lam=1e-3, variant="mu")
+    base.update(kw)
+    return GossipLinearConfig(**base)
+
+
+def toy(n=128, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 64, d, noise=0.05, separation=3.0)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def _degenerate_messages(rng, n, d):
+    """Messages spanning the regimes every codec must survive: mixed
+    magnitudes, large offsets with tiny ranges, all-equal rows, zeros."""
+    w = rng.normal(size=(n, d)) * np.exp(rng.uniform(-6, 6, size=(n, 1)))
+    w += rng.normal(size=(n, 1)) * np.exp(rng.uniform(-2, 8, size=(n, 1)))
+    w[0] = 0.0                      # the all-zero init model
+    w[1] = w[1, 0]                  # constant row: range collapses
+    w[2, :] = 1000.0
+    w[2, 0] = 1000.001              # huge offset, tiny range
+    w[3] = np.linspace(-6e4, 6e4, d)  # f16-range extremes, inf-free
+    return jnp.asarray(w, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_aliases():
+    assert set(WIRE_CODECS) == {"f32", "bf16", "f16", "int8", "int8_sr",
+                                "int4", "int4_ef", "ternary", "ternary_ef"}
+    assert get_codec(None) is WIRE_CODECS["f32"]
+    assert get_codec("") is WIRE_CODECS["f32"]
+    with pytest.raises(ValueError, match="unknown wire dtype"):
+        get_codec("int2")
+    assert deterministic_codec(get_codec("int8_sr")) is get_codec("int8")
+    assert deterministic_codec(get_codec("int4_ef")) is get_codec("int4_ef")
+
+
+def test_codec_lane_declarations():
+    """Each codec's declared lanes drive SimState/carry allocation — pin
+    the flag matrix so a registry edit cannot silently change state."""
+    flags = {n: (c.quantized, c.has_zp, c.ef, c.stochastic)
+             for n, c in WIRE_CODECS.items()}
+    assert flags == {
+        "f32": (False, False, False, False),
+        "bf16": (False, False, False, False),
+        "f16": (False, False, False, False),
+        "int8": (True, True, False, False),
+        "int8_sr": (True, True, False, True),
+        "int4": (True, False, False, False),
+        "int4_ef": (True, False, True, False),
+        "ternary": (True, False, False, False),
+        "ternary_ef": (True, False, True, False),
+    }
+
+
+def test_wire_byte_accounting_per_codec():
+    """The acceptance numbers at d=57 (spambase-sized): packed int4 rides
+    at ≤ 0.55× the int8 wire bytes, ternary at ≈ 0.28×."""
+    d = 57
+    assert message_wire_bytes(d, None) == 4 * d + 4
+    assert message_wire_bytes(d, "bf16") == 2 * d + 4
+    assert message_wire_bytes(d, "int8") == d + 4 + 4 == 65
+    assert message_wire_bytes(d, "int4_ef") == 29 + 4 + 2 == 35
+    assert message_wire_bytes(d, "ternary_ef") == 12 + 4 + 2 == 18
+    assert message_wire_bytes(d, "int4_ef") <= 0.55 * message_wire_bytes(
+        d, "int8")
+    # buffer accounting: packed payload cols × 1 B + scale overhead
+    assert payload_buffer_bytes(10, 100, d, "int4") == 10 * 100 * (29 + 2)
+    assert payload_buffer_bytes(10, 100, d, "ternary") == 10 * 100 * (12 + 2)
+
+
+# ---------------------------------------------------------------------------
+# round-trip properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", QUANTIZED)
+def test_roundtrip_error_bounded_by_one_step(wire):
+    """Property: per coordinate, |w - decode(encode(w))| <= one step of the
+    *transmitted* f16 scale, across degenerate ranges — half a step for the
+    round-to-nearest codecs, a full step for stochastic rounding."""
+    codec = get_codec(wire)
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        w = _degenerate_messages(rng, 64, 24)
+        payload, sc, zp = codec.encode(w, key=jax.random.key(trial))
+        back = codec.decode(payload, sc, zp, 24)
+        step = np.asarray(sc, np.float32)[:, None]
+        # + tiny absolute slack for ranges whose scale underflows f16 to 0
+        frac = 1.0 if codec.stochastic else 0.5
+        bound = frac * step + 1e-4
+        err = np.abs(np.asarray(back) - np.asarray(w))
+        assert np.all(err <= bound), (wire, trial, err.max(), step.max())
+
+
+@pytest.mark.parametrize("wire", PACKED)
+def test_packed_payload_representation(wire):
+    codec = get_codec(wire)
+    d = 57
+    w = _degenerate_messages(np.random.default_rng(1), 16, d)
+    payload, sc, zp = codec.encode(w)
+    assert payload.dtype == jnp.uint8
+    assert payload.shape == (16, codec.payload_cols(d))
+    assert sc.dtype == jnp.float16 and sc.shape == (16,)
+    assert zp is None
+    if codec.group == 5:            # base-3 bytes stay within 3^5 - 1
+        assert int(np.max(np.asarray(payload))) <= 242
+
+
+@pytest.mark.parametrize("d", [1, 3, 7, 57, 128, 130])
+def test_int4_pack_unpack_bit_exact(d):
+    """Pack→unpack is the identity on int4 codes for every width — odd d
+    exercises the half-filled final byte."""
+    rng = np.random.default_rng(d)
+    q = jnp.asarray(rng.integers(-8, 8, size=(9, d)), jnp.int32)
+    b = pack_int4(q)
+    assert b.shape == (9, -(-d // 2))
+    np.testing.assert_array_equal(np.asarray(unpack_int4(b, d)),
+                                  np.asarray(q))
+
+
+@pytest.mark.parametrize("d", [1, 4, 5, 57, 128, 131])
+def test_ternary_pack_unpack_bit_exact(d):
+    rng = np.random.default_rng(d)
+    q = jnp.asarray(rng.integers(-1, 2, size=(9, d)), jnp.int32)
+    b = pack_ternary(q)
+    assert b.shape == (9, -(-d // 5))
+    np.testing.assert_array_equal(np.asarray(unpack_ternary(b, d)),
+                                  np.asarray(q))
+
+
+def test_int4_codes_stay_symmetric():
+    """The -8 nibble is never produced by the quantizer (codes target
+    ±INT4_QMAX), so the symmetric decode has no asymmetry artifact."""
+    codec = get_codec("int4")
+    w = _degenerate_messages(np.random.default_rng(2), 64, 31)
+    q, _ = codec.quantize_codes(w)
+    qn = np.asarray(q)
+    assert qn.min() >= -INT4_QMAX and qn.max() <= INT4_QMAX
+
+
+# ---------------------------------------------------------------------------
+# error-feedback accumulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", EF)
+def test_ef_accumulator_bounded(wire):
+    """EF-SGD boundedness: iterating e' = (w + e) - decode(encode(w + e))
+    over a drifting model keeps |e| within half a step of the largest
+    transmitted scale seen — the residual never snowballs."""
+    codec = get_codec(wire)
+    rng = np.random.default_rng(0)
+    d = 24
+    ef = jnp.zeros((8, d), jnp.float32)
+    max_step = np.zeros((8, 1), np.float32)
+    for t in range(300):
+        w = jnp.asarray(rng.normal(size=(8, d)) * (1 + 3 * np.sin(t / 20)),
+                        jnp.float32)
+        x = w + ef
+        payload, sc, zp = codec.encode(x)
+        ef = x - codec.decode(payload, sc, zp, d)
+        max_step = np.maximum(max_step, np.asarray(sc, np.float32)[:, None])
+        assert np.all(np.abs(np.asarray(ef)) <= 0.5 * max_step + 1e-4), t
+
+
+@pytest.mark.parametrize("wire", EF)
+def test_ef_recovers_constant_model(wire):
+    """With a FIXED model the EF chain makes the time-averaged transmitted
+    payload converge to the true model (the bias the plain codec keeps is
+    recycled through the residual) — the EF-SGD telescoping-sum property."""
+    codec = get_codec(wire)
+    plain = get_codec(wire.replace("_ef", ""))
+    w = jnp.asarray(np.random.default_rng(3).normal(size=(4, 16)),
+                    jnp.float32)
+    ef = jnp.zeros_like(w)
+    acc = np.zeros(w.shape, np.float64)
+    T = 400
+    for _ in range(T):
+        x = w + ef
+        payload, sc, zp = codec.encode(x)
+        dec = codec.decode(payload, sc, zp, 16)
+        ef = x - dec
+        acc += np.asarray(dec, np.float64)
+    ef_bias = np.abs(acc / T - np.asarray(w)).max()
+    plain_bias = np.abs(np.asarray(plain.roundtrip(w)) - np.asarray(w)).max()
+    # time-averaging beats the one-shot code by a wide margin
+    assert ef_bias < 0.2 * plain_bias, (ef_bias, plain_bias)
+
+
+@pytest.mark.parametrize("wire", EF)
+def test_ef_residual_updates_only_on_sends(wire):
+    """Protocol state contract: a node that does not transmit this cycle
+    keeps its residual — pinned end to end by running the reference engine
+    under churn+drop (many non-senders per cycle) and checking the sharded
+    compact_all packing (which refreshes ONLY the sender subset) lands on
+    the bitwise-identical residual lane."""
+    X, y, Xt, yt = toy(n=96)
+    cfg = small_cfg(n_nodes=96, drop_prob=0.6, delay_max_cycles=5,
+                    online_fraction=0.5, wire_dtype=wire)
+    kw = dict(cycles=25, eval_every=25, seed=11)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    ca = run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                        compact_mode="compact_all", **kw)
+    assert ref.err_fresh == ca.err_fresh
+    assert ref.ef_residual_norm == ca.ef_residual_norm
+    assert ref.ef_residual_norm > 0.0
+
+
+def test_ef_residual_norm_helper():
+    assert ef_residual_norm(jnp.zeros((0, 0))) == 0.0
+    ef = jnp.asarray([[3.0, 4.0], [0.0, 0.0]], jnp.float32)
+    assert abs(ef_residual_norm(ef) - np.sqrt(25 / 2)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: reference == sharded (all packings) == Pallas-interpret
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", PACKED)
+def test_fixed_key_bitwise_parity_all_paths(wire):
+    """Acceptance bar for every new codec: for a fixed seed the error
+    curves (and EF telemetry) agree bitwise across the reference engine,
+    the sharded engine's dense and compact_all packings, the fused Pallas
+    receive kernel and the fused send kernel (interpret mode)."""
+    X, y, Xt, yt = toy()
+    cfg = small_cfg(drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9,
+                    wire_dtype=wire)
+    kw = dict(cycles=30, eval_every=15, seed=3)
+    ref = run_simulation(cfg, X, y, Xt, yt, **kw)
+    runs = dict(
+        compact=run_simulation(cfg, X, y, Xt, yt, engine="sharded", **kw),
+        dense=run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                             compact_rounds=False, **kw),
+        compact_all=run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                                   compact_mode="compact_all", **kw),
+        pallas=run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                              use_pallas=True, interpret=True, **kw),
+    )
+    for name, r in runs.items():
+        assert ref.err_fresh == r.err_fresh, (wire, name)
+        assert ref.err_voted == r.err_voted, (wire, name)
+        assert ref.ef_residual_norm == r.ef_residual_norm, (wire, name)
+        assert (ref.sent_total, ref.delivered_total, ref.lost_total,
+                ref.overflow_total) == (r.sent_total, r.delivered_total,
+                                        r.lost_total, r.overflow_total)
+
+
+@pytest.mark.parametrize("wire", ["int4_ef", "ternary"])
+def test_run_is_reproducible(wire):
+    X, y, Xt, yt = toy(n=64)
+    cfg = small_cfg(n_nodes=64, drop_prob=0.3, delay_max_cycles=4,
+                    wire_dtype=wire)
+    kw = dict(cycles=20, eval_every=10, seed=7, engine="sharded")
+    a = run_simulation(cfg, X, y, Xt, yt, **kw)
+    b = run_simulation(cfg, X, y, Xt, yt, **kw)
+    assert a.err_fresh == b.err_fresh and a.err_voted == b.err_voted
+    assert a.ef_residual_norm == b.ef_residual_norm
+
+
+@pytest.mark.parametrize("wire", ["int4", "int4_ef"])
+def test_wire_int4_curves_close_to_f32(wire):
+    """Documented tolerance: 8x-compressed wire payloads move the error
+    curves by at most 0.06 at any eval point on the toy problem."""
+    X, y, Xt, yt = toy()
+    kw = dict(cycles=30, eval_every=10, seed=1, engine="sharded")
+    f32 = run_simulation(small_cfg(), X, y, Xt, yt, **kw)
+    i4 = run_simulation(small_cfg(wire_dtype=wire), X, y, Xt, yt, **kw)
+    assert f32.cycles == i4.cycles
+    for a, b in zip(f32.err_fresh + f32.err_voted,
+                    i4.err_fresh + i4.err_voted):
+        assert abs(a - b) <= 0.06
+
+
+def test_accounting_packed_end_to_end():
+    """wire_bytes_total / buf_payload_bytes follow the codec exactly and
+    routing stays payload-blind for the packed codecs."""
+    X, y, Xt, yt = toy(n=32)
+    d, D, n = 16, 4, 32
+    kw = dict(cycles=10, eval_every=10, seed=0, engine="sharded")
+    f32 = run_simulation(small_cfg(n_nodes=n, delay_max_cycles=D),
+                         X, y, Xt, yt, **kw)
+    i4 = run_simulation(small_cfg(n_nodes=n, delay_max_cycles=D,
+                                  wire_dtype="int4_ef"), X, y, Xt, yt, **kw)
+    t3 = run_simulation(small_cfg(n_nodes=n, delay_max_cycles=D,
+                                  wire_dtype="ternary_ef"), X, y, Xt, yt,
+                        **kw)
+    assert i4.wire_bytes_total == i4.sent_total * (8 + 4 + 2)
+    assert t3.wire_bytes_total == t3.sent_total * (4 + 4 + 2)
+    assert i4.buf_payload_bytes == D * n * (8 + 2)
+    assert t3.buf_payload_bytes == D * n * (4 + 2)
+    assert i4.sent_total == t3.sent_total == f32.sent_total
+
+
+# ---------------------------------------------------------------------------
+# gossip_merge exchange path (the on-mesh optimizer contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["int4", "ternary"])
+def test_gossip_merge_packed_exchange_matches_codec_roundtrip(wire):
+    """gossip_merge(exchange_dtype=<codec name>) must equal the simulator's
+    wire path: encode the transmitted model per-row, decode, merge in f32
+    with the receiver's full-precision model."""
+    codec = get_codec(wire)
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(2, 64)),
+                    jnp.float32)
+    out = gossip_merge({"w": w}, np.array([1, 0]), exchange_dtype=wire)["w"]
+    msg = codec.roundtrip(w[1])
+    expect = (w[0] + msg) / 2.0
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(expect))
+
+
+def test_gossip_merge_accepts_names_and_dtypes():
+    """Back-compat: the legacy dtype spellings keep their exact behavior
+    (bf16 cast; jnp.int8 = the "int8" codec) and names alias them."""
+    w = jnp.asarray(np.random.default_rng(4).normal(size=(4, 32)),
+                    jnp.float32)
+    perm = np.array([1, 0, 3, 2])
+    by_dtype = gossip_merge({"w": w}, perm, exchange_dtype=jnp.bfloat16)["w"]
+    by_name = gossip_merge({"w": w}, perm, exchange_dtype="bf16")["w"]
+    np.testing.assert_array_equal(np.asarray(by_dtype), np.asarray(by_name))
+    i8_dtype = gossip_merge({"w": w}, perm, exchange_dtype=jnp.int8)["w"]
+    i8_name = gossip_merge({"w": w}, perm, exchange_dtype="int8")["w"]
+    sr_name = gossip_merge({"w": w}, perm, exchange_dtype="int8_sr")["w"]
+    np.testing.assert_array_equal(np.asarray(i8_dtype), np.asarray(i8_name))
+    # the optimizer path has no per-step key: int8_sr falls back to
+    # deterministic rounding
+    np.testing.assert_array_equal(np.asarray(i8_name), np.asarray(sr_name))
+
+
+def test_int4_ef_terminal_error_near_f32():
+    """The ROADMAP question, miniature edition: the merge-DAG averaging
+    absorbs the int4 feedback bias — terminal error with the 8x-compressed
+    int4_ef wire stays within a few error points of f32. (Ternary is a
+    different story: its max-scale codes are coarse enough that the EF
+    residual legitimately carries O(|w|) state and re-injects it, measured
+    as a *worse* terminal delta in BENCH_wire_quantization.json — the
+    benchmark records that answer rather than asserting it away.)"""
+    X, y, Xt, yt = toy(n=256, d=24, seed=5)
+    kw = dict(cycles=60, eval_every=60, seed=2, engine="sharded")
+    f32 = run_simulation(small_cfg(n_nodes=256, dim=24), X, y, Xt, yt, **kw)
+    i4ef = run_simulation(small_cfg(n_nodes=256, dim=24,
+                                    wire_dtype="int4_ef"), X, y, Xt, yt,
+                          **kw)
+    assert abs(i4ef.err_fresh[-1] - f32.err_fresh[-1]) <= 0.03, (
+        f32.err_fresh[-1], i4ef.err_fresh[-1])

@@ -14,8 +14,16 @@ token still resolves:
 * plain identifiers that look like symbols (contain "_" or "." or are
   CamelCase, length >= 4) must appear somewhere in the source corpus.
 
-Everything else (shell flags, config prose, math) is ignored. Run directly
-or via tools/run_tests.sh; exits non-zero listing every stale reference.
+Everything else (shell flags, config prose, math) is ignored.
+
+It also cross-checks the **wire-codec registry** against the docs: the
+codec table in docs/ENGINES.md (fenced by ``wire-codec-table`` markers)
+must name every codec registered in ``repro.core.wire_codec.WIRE_CODECS``,
+and must not name a codec that is not registered — so the codec docs
+cannot go stale in either direction.
+
+Run directly or via tools/run_tests.sh; exits non-zero listing every stale
+reference.
 """
 from __future__ import annotations
 
@@ -97,9 +105,54 @@ def check_token(tok: str, corpus: str):
     return None
 
 
+CODEC_TABLE = re.compile(
+    r"<!--\s*wire-codec-table:begin\s*-->(.*?)"
+    r"<!--\s*wire-codec-table:end\s*-->", re.S)
+
+
+def registered_codecs():
+    """The wire-codec registry, imported from the source tree (not an
+    installed package): the set of names the docs must mirror."""
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.core.wire_codec import WIRE_CODECS
+        return set(WIRE_CODECS)
+    finally:
+        sys.path.pop(0)
+
+
+def check_codec_registry(errors: list) -> None:
+    """Registry <-> docs consistency, both directions."""
+    doc = REPO / "docs" / "ENGINES.md"
+    text = doc.read_text() if doc.is_file() else ""
+    m = CODEC_TABLE.search(text)
+    if not m:
+        errors.append("docs/ENGINES.md: missing the "
+                      "<!-- wire-codec-table:begin/end --> markers around "
+                      "the codec table")
+        return
+    # first backticked token of each table row = the codec name column
+    doc_names = set()
+    for line in m.group(1).splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cell = line.split("|")[1]
+        doc_names.update(re.findall(r"`([A-Za-z0-9_]+)`", cell))
+    doc_names.discard("None")         # the f32 alias in prose
+    registered = registered_codecs()
+    for name in sorted(registered - doc_names):
+        errors.append(f"docs/ENGINES.md: registered wire codec {name!r} "
+                      "missing from the codec table")
+    for name in sorted(doc_names - registered):
+        errors.append(f"docs/ENGINES.md: codec table names {name!r}, which "
+                      "is not a registered wire codec")
+
+
 def main() -> int:
     corpus = source_corpus()
     errors = []
+    check_codec_registry(errors)
     for doc in DOC_FILES:
         if not doc.is_file():
             continue

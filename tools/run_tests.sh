@@ -10,10 +10,11 @@
 #                                    BENCH_population_scaling.json /
 #                                    BENCH_wire_quantization.json), then
 #                                    tools/check_bench_regression.py compares
-#                                    the fresh rates against the committed
-#                                    BENCH_population_scaling.json baseline —
+#                                    the fresh rates of BOTH benches against
+#                                    the committed BENCH_*.json baselines —
 #                                    an engine perf regression (or a broken
-#                                    cross-engine parity probe) fails loudly
+#                                    cross-engine wire-codec parity probe)
+#                                    fails loudly
 #
 # Every mode first runs tools/check_docs.py, so a doc referencing a removed
 # symbol fails tier 1.
@@ -42,19 +43,23 @@ fi
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     python -m pytest -x -q -k "not models and not perf" "$@"
-    # snapshot the committed baseline BEFORE the quick bench overwrites it,
-    # then fail loudly if the fresh rates regressed past the tolerance band
+    # snapshot the committed baselines BEFORE the quick benches overwrite
+    # them, then fail loudly if the fresh rates regressed past the
+    # tolerance band (or a wire-codec parity probe broke)
     baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
-    trap 'rm -f "$baseline"' EXIT
+    wire_baseline="$(mktemp /tmp/wire_baseline.XXXXXX.json)"
+    trap 'rm -f "$baseline" "$wire_baseline"' EXIT
     # mktemp pre-creates an EMPTY file: remove it so a tree without a
     # committed baseline takes the checker's "no baseline" skip path
     # instead of failing to parse zero bytes of JSON
-    rm -f "$baseline"
+    rm -f "$baseline" "$wire_baseline"
     cp BENCH_population_scaling.json "$baseline" 2>/dev/null || true
+    cp BENCH_wire_quantization.json "$wire_baseline" 2>/dev/null || true
     python -m benchmarks.run --quick \
         --only population_scaling,wire_quantization
-    python tools/check_bench_regression.py --baseline "$baseline" \
-        --current BENCH_population_scaling.json
+    python tools/check_bench_regression.py \
+        --pair "$baseline" BENCH_population_scaling.json \
+        --pair "$wire_baseline" BENCH_wire_quantization.json
     exit 0
 fi
 exec python -m pytest -x -q "$@"
