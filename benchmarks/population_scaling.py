@@ -39,6 +39,16 @@ CHURN_TRACE_N = 1_000_000      # churn-trace generation is timed at this N
 PARITY_N = 2_000               # cross-engine bitwise probe population
 
 
+def _retrace_total() -> int:
+    """Total jit compile-cache entries across both engines' hot-path fns
+    (tools/lint/retrace_guard.py is the hard gate; the bench records the
+    per-row delta so retrace churn shows up in the perf trajectory)."""
+    from repro.core import sharded_engine, simulation
+    return (sum(sharded_engine.retrace_counts().values())
+            + simulation.simulate_cycle._cache_size()
+            + simulation._eval._cache_size())
+
+
 def _dataset(n: int, d: int, seed: int = 0):
     from repro.data.synthetic import make_linear_dataset
     rng = np.random.default_rng(seed)
@@ -125,6 +135,7 @@ def run(quick: bool = False) -> dict:
         # is strictly additive. eval_every=10 gives paper-style curves and
         # lets the sharded engine pipeline host routing against the
         # in-flight device scan.
+        traces0 = _retrace_total()
         run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
                        eval_every=10, seed=0, k_rounds=k_rounds, **kw)
         secs = []
@@ -152,6 +163,9 @@ def run(quick: bool = False) -> dict:
             sent_total=res.sent_total,
             delivered_total=res.delivered_total,
             delivered_per_cycle_mean=float(dpc.mean()) if dpc.size else 0.0,
+            # compiles this row triggered (warm-up included; the timed
+            # runs reuse the warm-up's traces, so steady state adds zero)
+            retraces=_retrace_total() - traces0,
             compaction=res.compaction))
         print("population_scaling," + ",".join(str(x) for x in rows[-1]))
 

@@ -71,7 +71,7 @@ engine's (bitwise, up to XLA fusion-level float reassociation).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -512,6 +512,25 @@ def _shard_apply(base_apply, mesh, axis: str):
     return apply_fn
 
 
+# jitted chunk runners by config label, for compile-count accounting:
+# tools/lint/retrace_guard.py reads these via retrace_counts() and fails
+# when a run compiles more signatures than its pinned budget
+_CHUNK_FNS: Dict[str, Any] = {}
+
+
+def retrace_counts() -> Dict[str, int]:
+    """Compile-cache entry counts of the engine's jitted hot-path fns.
+
+    One entry per distinct traced signature (shape/dtype/static-arg
+    combination); a run that keeps compiling — chunk-length churn, packed
+    widths that never go sticky, a dtype flapping between chunks — shows up
+    here long before it shows up as a bench rate."""
+    counts = {"sharded_engine._draw_chunk": _draw_chunk._cache_size()}
+    for label, fn in _CHUNK_FNS.items():
+        counts[f"sharded_engine.chunk_fn[{label}]"] = fn._cache_size()
+    return counts
+
+
 @functools.lru_cache(maxsize=64)
 def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     delay_max: int, use_pallas: bool, interpret: bool,
@@ -782,7 +801,14 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
         errs = _eval(cache, eval_idx, X_test, y_test)
         return carry, errs
 
-    return jax.jit(chunk_fn, donate_argnums=(0,))
+    jitted = jax.jit(chunk_fn, donate_argnums=(0,))
+    # the index prefix keeps labels unique when configs differ only in a
+    # field the label omits (lam, eta, mesh, ...)
+    label = (f"{len(_CHUNK_FNS)}:{variant}/{learner}/{mode}/{wire or 'f32'}"
+             + ("/pallas" if use_pallas else "")
+             + ("/sendk" if use_send_kernel else ""))
+    _CHUNK_FNS[label] = jitted
+    return jitted
 
 
 # ---------------------------------------------------------------------------

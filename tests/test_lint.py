@@ -1,0 +1,481 @@
+"""repro-lint: every rule fires on a planted violation, stays quiet on a
+clean fixture, and the suppression mechanism demands a reason.
+
+Fixtures are written under ``tmp_path`` with repo-mimicking relative paths
+(rules scope themselves by ``ModuleInfo.relpath``), so the linter runs
+against them exactly as it runs against the real tree. The final test is
+the real gate: ``python tools/lint/run.py`` over the live repo must exit 0
+— the codebase itself is the clean fixture. The retrace budget math
+(``tools/lint/retrace_guard.check_budgets``) is unit-tested here too; the
+run itself lives in ``tools/run_tests.sh --bench-smoke``.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from lint.engine import run_lint, suppressions, ModuleInfo  # noqa: E402
+from lint.retrace_guard import BUDGETS, check_budgets, diff_counts  # noqa: E402
+from lint.rules import RULES  # noqa: E402
+
+
+def lint_fixture(tmp_path, relpath, source, rule=None):
+    """Write ``source`` at ``tmp_path/relpath`` and lint it."""
+    fp = tmp_path / relpath
+    fp.parent.mkdir(parents=True, exist_ok=True)
+    fp.write_text(textwrap.dedent(source))
+    rules = [RULES[rule]] if rule else list(RULES.values())
+    return run_lint([fp], tmp_path, rules)
+
+
+# ---------------------------------------------------------------------------
+# rule 1: rng-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_rng_unregistered_draw_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax
+
+        def sneaky_jitter(key, w):
+            noise = jax.random.normal(key, w.shape)
+            return w + 0.01 * noise
+        """, rule="rng-discipline")
+    assert [v.rule for v in vs] == ["rng-discipline"]
+    assert "sneaky_jitter" in vs[0].message
+    assert "normal" in vs[0].message
+
+
+def test_rng_registered_site_is_clean(tmp_path):
+    # (core/simulation.py, cycle_core) is in the allowlist with exactly
+    # split/randint/bernoulli — the positive control for the registry key
+    vs = lint_fixture(tmp_path, "src/repro/core/simulation.py", """\
+        import jax
+
+        def cycle_core(state, key):
+            k_recv, k_dst, k_delay, k_drop = jax.random.split(key, 4)
+            dst = jax.random.randint(k_dst, (4,), 0, 4)
+            drop = jax.random.bernoulli(k_drop, 0.5, (4,))
+            return dst, drop
+        """, rule="rng-discipline")
+    assert vs == []
+
+
+def test_rng_registered_site_wrong_fn_fires(tmp_path):
+    # cycle_core may split/randint/bernoulli — not uniform
+    vs = lint_fixture(tmp_path, "src/repro/core/simulation.py", """\
+        import jax
+
+        def cycle_core(state, key):
+            return jax.random.uniform(key, (4,))
+        """, rule="rng-discipline")
+    assert [v.rule for v in vs] == ["rng-discipline"]
+
+
+def test_rng_out_of_scope_dir_ignored(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/data/synthetic.py", """\
+        import jax
+
+        def sample(key):
+            return jax.random.normal(key, (4,))
+        """, rule="rng-discipline")
+    assert vs == []
+
+
+def test_rng_key_plumbing_not_a_draw(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax
+
+        def reseed(seed):
+            return jax.random.key(seed)
+        """, rule="rng-discipline")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# rule 2: shardmap-spec-arity
+# ---------------------------------------------------------------------------
+
+SHARDMAP_HEADER = "    from repro.sharding.compat import shard_map_compat\n\n"
+
+
+def test_shardmap_fixed_width_mismatch_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py",
+                      SHARDMAP_HEADER + """\
+    def apply(mesh, ps, a, b, c):
+        def inner(x, y, z):
+            return (x, y, z)
+        f = shard_map_compat(inner, mesh=mesh,
+                             in_specs=(ps,) * 2,
+                             out_specs=(ps,) * 3)
+        return f(a, b, c)
+    """, rule="shardmap-spec-arity")
+    assert [v.rule for v in vs] == ["shardmap-spec-arity"]
+    assert "2 fixed spec(s)" in vs[0].message
+    assert "3 positional" in vs[0].message
+
+
+def test_shardmap_spec_arithmetic_resolves_clean(tmp_path):
+    # the engine's real idiom: (ps,) * 8 + (ps2,) * 3 + dynamic varargs term
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py",
+                      SHARDMAP_HEADER + """\
+    def apply(mesh, ps, ps2, args, meta):
+        def inner(a, b, c, d, e, f, g, h, i, j, k, *rest):
+            return (a, b, c, d, e, f, g, h)
+        fn = shard_map_compat(inner, mesh=mesh,
+                              in_specs=(ps,) * 8 + (ps2,) * 3
+                              + (ps,) * len(meta),
+                              out_specs=(ps,) * 8)
+        return fn(*args)
+    """, rule="shardmap-spec-arity")
+    assert vs == []
+
+
+def test_shardmap_dynamic_term_without_varargs_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py",
+                      SHARDMAP_HEADER + """\
+    def apply(mesh, ps, meta, a, b):
+        def inner(x, y):
+            return (x, y)
+        f = shard_map_compat(inner, mesh=mesh,
+                             in_specs=(ps,) * 2 + (ps,) * len(meta),
+                             out_specs=(ps,) * 2)
+        return f(a, b)
+    """, rule="shardmap-spec-arity")
+    assert len(vs) == 1
+    assert "no *varargs" in vs[0].message
+
+
+def test_shardmap_out_specs_vs_returns_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py",
+                      SHARDMAP_HEADER + """\
+    def apply(mesh, ps, a, b):
+        def inner(x, y):
+            return (x, y)
+        f = shard_map_compat(inner, mesh=mesh,
+                             in_specs=(ps,) * 2,
+                             out_specs=(ps,) * 3)
+        return f(a, b)
+    """, rule="shardmap-spec-arity")
+    assert len(vs) == 1
+    assert "returns a 2-tuple" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule 3: merge-dtype-purity
+# ---------------------------------------------------------------------------
+
+
+def test_merge_mixed_dtype_arith_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax.numpy as jnp
+
+        def merge(w_local, msg):
+            w = w_local.astype(jnp.float32)
+            payload = msg.astype(jnp.bfloat16)
+            return 0.5 * (w + payload)
+        """, rule="merge-dtype-purity")
+    assert [v.rule for v in vs] == ["merge-dtype-purity"]
+    assert "astype" in vs[0].message
+
+
+def test_merge_explicit_astype_is_clean(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax.numpy as jnp
+
+        def merge(w_local, msg):
+            w = w_local.astype(jnp.float32)
+            payload = msg.astype(jnp.bfloat16).astype(jnp.float32)
+            return 0.5 * (w + payload)
+        """, rule="merge-dtype-purity")
+    assert vs == []
+
+
+def test_merge_out_of_scope_file_ignored(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/cache.py", """\
+        import jax.numpy as jnp
+
+        def merge(w_local, msg):
+            w = w_local.astype(jnp.float32)
+            payload = msg.astype(jnp.bfloat16)
+            return w + payload
+        """, rule="merge-dtype-purity")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# rule 4: tracer-leak
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_branch_in_scan_body_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from jax import lax
+
+        def run(xs, carry0):
+            def body(carry, x):
+                if x > 0:
+                    carry = carry + x
+                return carry, x
+            return lax.scan(body, carry0, xs)
+        """, rule="tracer-leak")
+    assert [v.rule for v in vs] == ["tracer-leak"]
+    assert "`if`" in vs[0].message
+
+
+def test_tracer_float_coercion_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from jax import lax
+
+        def run(xs, carry0):
+            def body(carry, x):
+                scale = float(x)
+                return carry * scale, x
+            return lax.scan(body, carry0, xs)
+        """, rule="tracer-leak")
+    assert len(vs) == 1
+    assert "float() coercion" in vs[0].message
+
+
+def test_tracer_leak_in_callee_fires(tmp_path):
+    # the taint follows the call into a same-module helper
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from jax import lax
+
+        def helper(v):
+            if v > 0:
+                return v
+            return -v
+
+        def run(xs, carry0):
+            def body(carry, x):
+                return carry + helper(x), x
+            return lax.scan(body, carry0, xs)
+        """, rule="tracer-leak")
+    assert len(vs) == 1
+    assert vs[0].rule == "tracer-leak"
+
+
+def test_tracer_static_branches_are_clean(tmp_path):
+    # shape reads, config compares, len() of python containers: all static
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from jax import lax
+
+        def run(xs, carry0, mode, meta):
+            def body(carry, x):
+                if mode == "compact":
+                    carry = carry * 2
+                if x.shape[0] > 1:
+                    carry = carry + 1
+                for _ in range(len(meta)):
+                    carry = carry + x
+                return carry, x
+            return lax.scan(body, carry0, xs)
+        """, rule="tracer-leak")
+    assert vs == []
+
+
+def test_tracer_outside_scan_is_clean(tmp_path):
+    # plain python branching on values is fine outside traced bodies
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        def host_side(x):
+            if x > 0:
+                return float(x)
+            return 0.0
+        """, rule="tracer-leak")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# rule 5: codec-literal
+# ---------------------------------------------------------------------------
+
+
+def test_codec_unknown_literal_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        def launch(cfg_cls):
+            return cfg_cls(wire_dtype="int3")
+        """, rule="codec-literal")
+    assert [v.rule for v in vs] == ["codec-literal"]
+    assert "'int3'" in vs[0].message
+
+
+def test_codec_registered_literals_clean(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from repro.core.wire_codec import WIRE_CODECS, get_codec
+
+        def launch(cfg_cls):
+            get_codec("int8_sr")
+            codec = WIRE_CODECS["ternary_ef"]
+            return cfg_cls(wire_dtype="bf16")
+        """, rule="codec-literal")
+    assert vs == []
+
+
+def test_codec_get_codec_unknown_fires(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        from repro.core.wire_codec import get_codec
+
+        def launch():
+            return get_codec("fp8")
+        """, rule="codec-literal")
+    assert len(vs) == 1
+    assert "get_codec()" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_silences(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax
+
+        def jitter(key, w):
+            n = jax.random.normal(key, w.shape)  # lint: disable=rng-discipline(noise ablation study)
+            return w + n
+        """, rule="rng-discipline")
+    assert vs == []
+
+
+def test_suppression_without_reason_is_a_violation(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax
+
+        def jitter(key, w):
+            n = jax.random.normal(key, w.shape)  # lint: disable=rng-discipline
+            return w + n
+        """, rule="rng-discipline")
+    # the draw is still reported AND the bare suppression is its own error
+    assert sorted(v.rule for v in vs) == ["rng-discipline", "suppression"]
+
+
+def test_suppression_wrong_rule_does_not_silence(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/merge.py", """\
+        import jax
+
+        def jitter(key, w):
+            n = jax.random.normal(key, w.shape)  # lint: disable=tracer-leak(wrong rule)
+            return w + n
+        """, rule="rng-discipline")
+    assert [v.rule for v in vs] == ["rng-discipline"]
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        def broken(:
+        """)
+    assert [v.rule for v in vs] == ["parse"]
+
+
+def test_clean_fixture_all_rules(tmp_path):
+    vs = lint_fixture(tmp_path, "src/repro/core/engine.py", """\
+        import jax.numpy as jnp
+        from jax import lax
+
+        def run(xs, carry0):
+            def body(carry, x):
+                return carry + x.astype(jnp.float32), x
+            return lax.scan(body, carry0, xs)
+        """)
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# the real gate: the repo itself lints clean, and the CLI exits nonzero on
+# a planted violation
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint" / "run.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro-lint: OK" in proc.stdout
+
+
+def test_cli_exits_nonzero_on_violation(tmp_path):
+    fp = tmp_path / "src" / "repro" / "core" / "bad.py"
+    fp.parent.mkdir(parents=True)
+    fp.write_text("import jax\n\n"
+                  "def f(key):\n"
+                  "    return jax.random.normal(key, (4,))\n")
+    # run.py resolves relpaths against the real repo root, so plant the
+    # file inside it only via the engine API above; here we drive the CLI
+    # with an in-repo fixture under a throwaway name
+    target = REPO / "src" / "repro" / "core" / "_lint_probe_tmp.py"
+    target.write_text(fp.read_text())
+    try:
+        proc = subprocess.run(
+            [sys.executable, str(REPO / "tools" / "lint" / "run.py"),
+             str(target)],
+            capture_output=True, text=True)
+    finally:
+        target.unlink()
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "[rng-discipline]" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# CONTRACTS.md stays honest
+# ---------------------------------------------------------------------------
+
+
+def test_every_rule_has_a_contract_line():
+    for name, rule in RULES.items():
+        assert rule.contract, f"rule {name} has an empty contract string"
+
+
+def test_contracts_doc_lists_every_rule():
+    doc = (REPO / "docs" / "CONTRACTS.md").read_text()
+    for name in RULES:
+        assert f"`{name}`" in doc, f"docs/CONTRACTS.md missing rule {name}"
+
+
+# ---------------------------------------------------------------------------
+# retrace budget math
+# ---------------------------------------------------------------------------
+
+
+def test_budgets_pass_within_limits():
+    assert check_budgets({"simulation.simulate_cycle": 1,
+                          "sharded_engine._draw_chunk": 1}, BUDGETS) == []
+
+
+def test_budgets_fail_when_exceeded():
+    errs = check_budgets({"simulation.simulate_cycle": 3}, BUDGETS)
+    assert len(errs) == 1
+    assert "retracing" in errs[0]
+
+
+def test_budgets_fail_on_unbudgeted_source():
+    errs = check_budgets({"sharded_engine.chunk_fn[0:new/path/x/y]": 1},
+                         BUDGETS)
+    assert len(errs) == 1
+    assert "unbudgeted" in errs[0]
+
+
+def test_budgets_normalize_chunk_fn_instance_index():
+    # two instances of the same config label aggregate onto one budget key
+    errs = check_budgets(
+        {"sharded_engine.chunk_fn[0:mu/pegasos/dense/f32]": 1,
+         "sharded_engine.chunk_fn[3:mu/pegasos/dense/f32]": 1},
+        {"sharded_engine.chunk_fn[mu/pegasos/dense/f32]": 1})
+    assert len(errs) == 1
+    assert "2 compile(s) > budget 1" in errs[0]
+
+
+def test_warm_rerun_diff_flags_growth():
+    cold = {"simulation.simulate_cycle": 1}
+    assert diff_counts(cold, {"simulation.simulate_cycle": 1}) == []
+    errs = diff_counts(cold, {"simulation.simulate_cycle": 2,
+                              "simulation._eval": 1})
+    assert len(errs) == 2
+    assert all("warm rerun" in e for e in errs)

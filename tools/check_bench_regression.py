@@ -31,7 +31,10 @@ full baseline — a rate mismatch there says nothing about the engine.
 
 Also guards every file's ``parity_bitwise`` probe: any wire codec whose
 cross-engine curves stopped being bitwise-identical fails regardless of
-speed — for the wire bench that covers the full codec registry.
+speed — for the wire bench that covers the full codec registry. Rows
+carrying a ``retraces`` field (compiles triggered per bench row) are
+diffed informationally — the hard compile-count gate is
+``tools/lint/retrace_guard.py``.
 """
 from __future__ import annotations
 
@@ -108,6 +111,16 @@ def check_pair(base_fp: Path, cur_fp: Path, tolerance: float,
         print(f"check_bench_regression: [{label}] "
               f"{'/'.join(str(k) for k in key)}: "
               f"{c / b:.2f}x baseline ({verdict})")
+    # retrace counts are informational here (quick vs full sweeps warm
+    # different caches); the hard gate is tools/lint/retrace_guard.py
+    for key, crow in sorted(cur_rows.items()):
+        brow = base_rows.get(key)
+        rb = (brow or {}).get("retraces")
+        rc = crow.get("retraces")
+        if rb is not None and rc is not None and rc > rb:
+            print(f"check_bench_regression: [{label}] "
+                  f"{'/'.join(str(k) for k in key)}: retraces {rb} -> {rc} "
+                  "(informational — see tools/lint/retrace_guard.py)")
     skipped = len(cur_rows) - compared - small
     if skipped:
         print(f"check_bench_regression: [{label}] {skipped} row(s) without "

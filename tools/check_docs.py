@@ -20,7 +20,9 @@ It also cross-checks the **wire-codec registry** against the docs: the
 codec table in docs/ENGINES.md (fenced by ``wire-codec-table`` markers)
 must name every codec registered in ``repro.core.wire_codec.WIRE_CODECS``,
 and must not name a codec that is not registered — so the codec docs
-cannot go stale in either direction.
+cannot go stale in either direction. The **repro-lint rule table** in
+docs/CONTRACTS.md (fenced by ``lint-rule-table`` markers) is held to the
+same standard against ``tools/lint/rules.RULES``.
 
 Run directly or via tools/run_tests.sh; exits non-zero listing every stale
 reference.
@@ -149,10 +151,53 @@ def check_codec_registry(errors: list) -> None:
                       "is not a registered wire codec")
 
 
+LINT_TABLE = re.compile(
+    r"<!--\s*lint-rule-table:begin\s*-->(.*?)"
+    r"<!--\s*lint-rule-table:end\s*-->", re.S)
+
+
+def registered_lint_rules():
+    """The repro-lint rule registry, imported from tools/lint: the set of
+    rule names the CONTRACTS.md table must mirror."""
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        from lint.rules import RULES
+        return set(RULES)
+    finally:
+        sys.path.pop(0)
+
+
+def check_lint_rules(errors: list) -> None:
+    """Rule registry <-> docs/CONTRACTS.md consistency, both directions."""
+    doc = REPO / "docs" / "CONTRACTS.md"
+    text = doc.read_text() if doc.is_file() else ""
+    m = LINT_TABLE.search(text)
+    if not m:
+        errors.append("docs/CONTRACTS.md: missing the "
+                      "<!-- lint-rule-table:begin/end --> markers around "
+                      "the rule table")
+        return
+    doc_names = set()
+    for line in m.group(1).splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cell = line.split("|")[1]
+        doc_names.update(re.findall(r"`([A-Za-z0-9_-]+)`", cell))
+    registered = registered_lint_rules()
+    for name in sorted(registered - doc_names):
+        errors.append(f"docs/CONTRACTS.md: repro-lint rule {name!r} "
+                      "missing from the rule table")
+    for name in sorted(doc_names - registered):
+        errors.append(f"docs/CONTRACTS.md: rule table names {name!r}, "
+                      "which is not a registered repro-lint rule")
+
+
 def main() -> int:
     corpus = source_corpus()
     errors = []
     check_codec_registry(errors)
+    check_lint_rules(errors)
     for doc in DOC_FILES:
         if not doc.is_file():
             continue

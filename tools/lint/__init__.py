@@ -1,0 +1,9 @@
+"""repro-lint: contract-enforcing static analysis for the gossip repo.
+
+``python tools/lint/run.py`` walks the source tree with the AST rules in
+:mod:`lint.rules` (registry ``RULES``) and exits non-zero on any violation.
+Per-line suppressions are ``# lint: disable=RULE(reason)`` — the reason is
+mandatory. The invariants the rules encode are written up in
+docs/CONTRACTS.md, whose rule table is cross-checked against ``RULES`` both
+ways by tools/check_docs.py.
+"""

@@ -1,0 +1,100 @@
+"""The repro-lint rule engine: parsed modules, violations, suppressions.
+
+A rule is an object with a ``name`` and a ``check(ModuleInfo) -> [Violation]``
+method; the engine parses each file once, runs every rule over it, and
+filters the results through per-line suppression comments:
+
+    risky_call()    # lint: disable=rng-discipline(prototype noise study)
+
+The parenthesised reason is mandatory — a bare ``# lint: disable=RULE`` is
+itself reported (rule name ``suppression``), so every silenced site carries
+its justification in the diff. Rules scope themselves by the module's
+repo-relative path (``ModuleInfo.relpath``), which is what lets the test
+suite replay them against planted fixtures under a temp root.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+SUPPRESS = re.compile(
+    r"#\s*lint:\s*disable=([A-Za-z][A-Za-z0-9_-]*)\s*(?:\(\s*([^)]*?)\s*\))?")
+
+
+@dataclasses.dataclass
+class Violation:
+    rule: str
+    relpath: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.relpath}:{self.line}: [{self.rule}] {self.message}"
+
+
+class ModuleInfo:
+    """One parsed source file plus its repo-relative path for rule scoping."""
+
+    def __init__(self, path: Path, repo_root: Path):
+        self.path = Path(path)
+        self.relpath = (self.path.resolve()
+                        .relative_to(Path(repo_root).resolve()).as_posix())
+        self.source = self.path.read_text()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.lines = self.source.splitlines()
+
+
+class Rule:
+    """Base rule: subclasses set ``name``/``contract`` and implement
+    ``check``. ``contract`` is the one-line invariant the rule enforces,
+    mirrored into the docs/CONTRACTS.md rule table."""
+
+    name: str = ""
+    contract: str = ""
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        raise NotImplementedError
+
+
+def suppressions(mod: ModuleInfo) -> Tuple[Dict[int, Set[str]],
+                                           List[Violation]]:
+    """Per-line suppressed rule names, plus violations for reason-less
+    suppression comments (which are never honored)."""
+    supp: Dict[int, Set[str]] = {}
+    errs: List[Violation] = []
+    for lineno, text in enumerate(mod.lines, 1):
+        for m in SUPPRESS.finditer(text):
+            rule, reason = m.group(1), m.group(2)
+            if not reason:
+                errs.append(Violation(
+                    "suppression", mod.relpath, lineno,
+                    f"suppression of {rule!r} carries no reason — write "
+                    f"# lint: disable={rule}(why this site is sanctioned)"))
+                continue
+            supp.setdefault(lineno, set()).add(rule)
+    return supp, errs
+
+
+def run_lint(files, repo_root, rules) -> List[Violation]:
+    """Run ``rules`` over ``files``; returns surviving violations sorted by
+    (path, line). Suppression comments must sit on the violating line."""
+    out: List[Violation] = []
+    for fp in files:
+        try:
+            mod = ModuleInfo(Path(fp), repo_root)
+        except SyntaxError as exc:
+            out.append(Violation("parse", str(fp), exc.lineno or 0,
+                                 f"syntax error: {exc.msg}"))
+            continue
+        supp, errs = suppressions(mod)
+        out.extend(errs)
+        for rule in rules:
+            for v in rule.check(mod):
+                if rule.name in supp.get(v.line, set()):
+                    continue
+                out.append(v)
+    out.sort(key=lambda v: (v.relpath, v.line, v.rule))
+    return out

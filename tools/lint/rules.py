@@ -1,0 +1,670 @@
+"""The repro-lint rules — one class per contract (docs/CONTRACTS.md).
+
+``RULES`` maps rule name -> instance; the CONTRACTS.md rule table mirrors
+this registry and tools/check_docs.py cross-checks the two both ways, the
+same mechanism that keeps the ENGINES.md codec table honest.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from lint.engine import ModuleInfo, Rule, Violation
+from lint.rng_allowlist import RNG_ALLOWED
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+
+def _walk_scoped(node: ast.AST, stack: Tuple[str, ...] = ()
+                 ) -> Iterator[Tuple[ast.AST, Tuple[str, ...]]]:
+    """Yield (node, enclosing-def-qualname-tuple) for every descendant."""
+    for child in ast.iter_child_nodes(node):
+        yield child, stack
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield from _walk_scoped(child, stack + (child.name,))
+        else:
+            yield from _walk_scoped(child, stack)
+
+
+def _call_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """Descendants of ``node`` that belong to its own scope — does not
+    descend into nested def/lambda bodies (they get their own pass)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        yield from _walk_own(child)
+
+
+def _scope_lookup(table: dict, stack: Tuple[str, ...], name: str):
+    """Innermost-first lookup of ``name`` along the enclosing-def chain."""
+    for cut in range(len(stack), -1, -1):
+        hit = table.get((stack[:cut], name))
+        if hit is not None:
+            return hit
+    return None
+
+
+class _ModuleIndex:
+    """Scoped def/assignment tables of one module, shared across rules."""
+
+    def __init__(self, mod: ModuleInfo):
+        self.defs: dict = {}        # (scope_tuple, name) -> FunctionDef
+        self.def_scope: dict = {}   # id(FunctionDef) -> its INNER scope
+        self.assigns: dict = {}     # (scope_tuple, name) -> last value node
+        for node, stack in _walk_scoped(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[(stack, node.name)] = node
+                self.def_scope[id(node)] = stack + (node.name,)
+            elif (isinstance(node, ast.Assign) and len(node.targets) == 1
+                  and isinstance(node.targets[0], ast.Name)):
+                self.assigns[(stack, node.targets[0].id)] = node.value
+
+    def resolve_fn(self, expr: ast.AST, stack: Tuple[str, ...]
+                   ) -> List[ast.FunctionDef]:
+        """Resolve a callable expression to local def(s): unwraps
+        ``functools.partial(f, ...)``, follows one plain rebinding and the
+        ``body = {...: fn}[mode]`` dict-dispatch idiom."""
+        if (isinstance(expr, ast.Call)
+                and _call_name(expr.func) == "partial" and expr.args):
+            expr = expr.args[0]
+        if not isinstance(expr, ast.Name):
+            return []
+        d = _scope_lookup(self.defs, stack, expr.id)
+        if d is not None:
+            return [d]
+        val = _scope_lookup(self.assigns, stack, expr.id)
+        if isinstance(val, ast.Subscript) and isinstance(val.value, ast.Dict):
+            out = []
+            for v in val.value.values:
+                if isinstance(v, ast.Name):
+                    d = _scope_lookup(self.defs, stack, v.id)
+                    if d is not None:
+                        out.append(d)
+            return out
+        if isinstance(val, ast.Name):
+            d = _scope_lookup(self.defs, stack, val.id)
+            if d is not None:
+                return [d]
+        return []
+
+
+# ---------------------------------------------------------------------------
+# rule 1: rng-discipline
+# ---------------------------------------------------------------------------
+
+# key plumbing, not draws: these never advance a threefry counter
+_RNG_PLUMBING = {"key", "key_data", "wrap_key_data", "PRNGKey"}
+
+
+def _rng_fn(func: ast.AST) -> Optional[str]:
+    """'split' for ``jax.random.split`` / ``jrandom.split``-style calls."""
+    if not isinstance(func, ast.Attribute):
+        return None
+    v = func.value
+    if (isinstance(v, ast.Attribute) and v.attr == "random"
+            and isinstance(v.value, ast.Name) and v.value.id == "jax"):
+        return func.attr
+    if isinstance(v, ast.Name) and v.id in ("jrandom", "jr"):
+        return func.attr
+    return None
+
+
+class RngDiscipline(Rule):
+    name = "rng-discipline"
+    contract = ("every jax.random draw in core/ and kernels/ is a "
+                "registered site of the pinned per-cycle threefry "
+                "draw sequence (tools/lint/rng_allowlist.py)")
+    SCOPE = ("src/repro/core/", "src/repro/kernels/")
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        if not mod.relpath.startswith(self.SCOPE):
+            return []
+        rel = mod.relpath[len("src/repro/"):]
+        out = []
+        for node, stack in _walk_scoped(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = _rng_fn(node.func)
+            if fn is None or fn in _RNG_PLUMBING:
+                continue
+            qual = ".".join(stack) or "<module>"
+            if fn in RNG_ALLOWED.get((rel, qual), ()):
+                continue
+            out.append(Violation(
+                self.name, mod.relpath, node.lineno,
+                f"unregistered jax.random.{fn} in {qual} — an extra draw "
+                "shifts every later threefry counter and breaks "
+                "cross-engine bitwise parity; register the site in "
+                "tools/lint/rng_allowlist.py naming its draw-sequence "
+                "contract"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# rule 2: shardmap-spec-arity
+# ---------------------------------------------------------------------------
+
+
+def _spec_width(node: ast.AST) -> Optional[Tuple[int, int]]:
+    """(fixed_entries, dynamic_terms) of a spec-tuple expression, resolving
+    the ``(ps,) * 8 + (ps,) * len(meta)`` arithmetic; None = not a tuple
+    expression (a single broadcast spec matches any arity)."""
+    if isinstance(node, ast.Tuple):
+        return len(node.elts), 0
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        a, b = _spec_width(node.left), _spec_width(node.right)
+        if a is None or b is None:
+            return None
+        return a[0] + b[0], a[1] + b[1]
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        tup, k = node.left, node.right
+        if not isinstance(tup, ast.Tuple):
+            tup, k = node.right, node.left
+        if not isinstance(tup, ast.Tuple):
+            return None
+        if isinstance(k, ast.Constant) and isinstance(k.value, int):
+            return len(tup.elts) * k.value, 0
+        return 0, 1                   # (ps,) * len(meta): a dynamic term
+    return None
+
+
+def _own_returns(fn: ast.FunctionDef) -> List[ast.Return]:
+    """Return statements of ``fn`` itself, not of defs nested inside it."""
+    outs: List[ast.Return] = []
+
+    def rec(n):
+        for c in ast.iter_child_nodes(n):
+            if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                continue
+            if isinstance(c, ast.Return):
+                outs.append(c)
+            rec(c)
+
+    rec(fn)
+    return outs
+
+
+class ShardmapSpecArity(Rule):
+    name = "shardmap-spec-arity"
+    contract = ("shard_map_compat spec-tuple widths match the wrapped "
+                "function's parameter/return arity, dynamic "
+                "(ps,) * len(x) terms matching *varargs")
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        if not mod.relpath.startswith("src/"):
+            return []
+        idx = _ModuleIndex(mod)
+        out = []
+        for node, stack in _walk_scoped(mod.tree):
+            if (not isinstance(node, ast.Call)
+                    or _call_name(node.func) != "shard_map_compat"
+                    or not node.args):
+                continue
+            fns = idx.resolve_fn(node.args[0], stack)
+            if len(fns) != 1:
+                continue              # unresolvable target: nothing to check
+            fn = fns[0]
+            nparams = len(fn.args.posonlyargs) + len(fn.args.args)
+            vararg = fn.args.vararg is not None
+            kw = {k.arg: k.value for k in node.keywords}
+            in_w = _spec_width(kw.get("in_specs"))
+            if in_w is not None:
+                fixed, dyn = in_w
+                if fixed != nparams:
+                    out.append(Violation(
+                        self.name, mod.relpath, node.lineno,
+                        f"in_specs has {fixed} fixed spec(s) but "
+                        f"{fn.name}() takes {nparams} positional "
+                        "parameter(s) — a silent arity drift is exactly how "
+                        "a new carry lane loses its sharding"))
+                elif dyn > 0 and not vararg:
+                    out.append(Violation(
+                        self.name, mod.relpath, node.lineno,
+                        f"in_specs has a dynamic (spec,) * len(...) term "
+                        f"but {fn.name}() takes no *varargs"))
+                elif vararg and dyn == 0:
+                    out.append(Violation(
+                        self.name, mod.relpath, node.lineno,
+                        f"{fn.name}() takes *{fn.args.vararg.arg} but "
+                        "in_specs carries no dynamic (spec,) * len(...) "
+                        "term for it"))
+            out_w = _spec_width(kw.get("out_specs"))
+            if out_w is not None and out_w[1] == 0:
+                rets = _own_returns(fn)
+                tuple_rets = [r for r in rets
+                              if isinstance(r.value, ast.Tuple)]
+                # only checkable when every return is a literal tuple of
+                # one consistent width
+                widths = {len(r.value.elts) for r in tuple_rets}
+                if (tuple_rets and len(tuple_rets) == len(rets)
+                        and len(widths) == 1 and widths != {out_w[0]}):
+                    out.append(Violation(
+                        self.name, mod.relpath, node.lineno,
+                        f"out_specs has {out_w[0]} spec(s) but {fn.name}() "
+                        f"returns a {widths.pop()}-tuple"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# rule 3: merge-dtype-purity
+# ---------------------------------------------------------------------------
+
+_F32_NAMES = {"float32", "f32"}
+_WIRE_NAMES = {"bfloat16", "float16", "int8", "uint8", "int16", "uint16",
+               "int4", "f16", "bf16", "half"}
+_ARITH = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod,
+          ast.Pow, ast.MatMult)
+
+
+def _dtype_class(node: ast.AST) -> Optional[str]:
+    """'f32' / 'wire' for a dtype-naming expression (jnp.float32, 'int8')."""
+    attr = None
+    if isinstance(node, ast.Attribute):
+        attr = node.attr
+    elif isinstance(node, ast.Name):
+        attr = node.id
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        attr = node.value
+    if attr in _F32_NAMES:
+        return "f32"
+    if attr in _WIRE_NAMES:
+        return "wire"
+    return None
+
+
+def _dtype_of(node: ast.AST, env: dict) -> Optional[str]:
+    """Forward dtype estimate: 'f32' | 'wire' | 'neutral' (python scalar,
+    weak-typed in jax) | None (unknown — never flagged)."""
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.Constant):
+        return ("neutral" if isinstance(node.value, (int, float))
+                and not isinstance(node.value, bool) else None)
+    if isinstance(node, (ast.Subscript, ast.UnaryOp)):
+        inner = node.value if isinstance(node, ast.Subscript) else node.operand
+        return _dtype_of(inner, env)
+    if isinstance(node, ast.BinOp):
+        a, b = _dtype_of(node.left, env), _dtype_of(node.right, env)
+        for strong in ("f32", "wire"):
+            if strong in (a, b):
+                return strong if {a, b} <= {strong, "neutral"} else None
+        return None
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "astype" and node.args:
+                return _dtype_class(node.args[0])
+            if f.attr in ("zeros", "ones", "full", "empty", "asarray",
+                          "array"):
+                for k in node.keywords:
+                    if k.arg == "dtype":
+                        return _dtype_class(k.value)
+                if len(node.args) >= 2:
+                    return _dtype_class(node.args[-1])
+                return None
+            if f.attr == "where" and len(node.args) == 3:
+                a = _dtype_of(node.args[1], env)
+                b = _dtype_of(node.args[2], env)
+                return a if a == b else None
+            # jnp.float16(x)-style dtype constructors
+            if isinstance(f.value, ast.Name) and f.value.id in ("jnp", "np"):
+                return _dtype_class(ast.Name(id=f.attr))
+    return None
+
+
+class MergeDtypePurity(Rule):
+    name = "merge-dtype-purity"
+    contract = ("merge arithmetic runs in f32: no +,-,*,/ mixing a "
+                "wire-dtype operand (bf16/f16/int lanes) into f32 math "
+                "without an explicit .astype")
+    SCOPE = ("src/repro/core/merge.py", "src/repro/core/wire_codec.py",
+             "src/repro/core/gossip_optimizer.py",
+             "src/repro/core/simulation.py",
+             "src/repro/core/sharded_engine.py", "src/repro/kernels/")
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        if not mod.relpath.startswith(self.SCOPE):
+            return []
+        out: List[Violation] = []
+        for node, stack in _walk_scoped(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_fn(node, mod, out)
+        return out
+
+    def _check_fn(self, fn, mod: ModuleInfo, out: List[Violation]) -> None:
+        env: dict = {}
+        seen: set = set()
+
+        def stmts(body):
+            for st in body:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue          # nested defs get their own pass
+                self._check_exprs(st, env, seen, mod, out)
+                if isinstance(st, ast.Assign):
+                    val = _dtype_of(st.value, env)
+                    for tgt in st.targets:
+                        if isinstance(tgt, ast.Name):
+                            env[tgt.id] = val
+                        elif isinstance(tgt, ast.Tuple):
+                            for el in tgt.elts:
+                                if isinstance(el, ast.Name):
+                                    env[el.id] = None
+                elif isinstance(st, ast.AugAssign) and \
+                        isinstance(st.target, ast.Name):
+                    env[st.target.id] = None
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(st, attr, None)
+                    if sub:
+                        stmts(sub)
+
+        stmts(fn.body)
+
+    def _check_exprs(self, st, env, seen, mod, out) -> None:
+        for sub in _walk_own(st):
+            if (isinstance(sub, ast.BinOp) and isinstance(sub.op, _ARITH)
+                    and (sub.lineno, sub.col_offset) not in seen):
+                a = _dtype_of(sub.left, env)
+                b = _dtype_of(sub.right, env)
+                if {a, b} == {"f32", "wire"}:
+                    seen.add((sub.lineno, sub.col_offset))
+                    out.append(Violation(
+                        self.name, mod.relpath, sub.lineno,
+                        "arithmetic mixes a wire-dtype operand into f32 "
+                        "math — implicit promotion silently changes the "
+                        "merge result; insert an explicit "
+                        ".astype(jnp.float32)"))
+
+
+# ---------------------------------------------------------------------------
+# rule 4: tracer-leak
+# ---------------------------------------------------------------------------
+
+
+def _is_static(node: ast.AST, taint: set, static: set) -> bool:
+    """True when the expression's VALUE is fixed at trace time (shapes,
+    dtypes, python containers, config), so branching/len() on it is legal
+    inside a scan body or kernel."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id not in taint or node.id in static
+    if isinstance(node, ast.Attribute):
+        return (node.attr in ("shape", "ndim", "dtype", "size")
+                or _is_static(node.value, taint, static))
+    if isinstance(node, (ast.Tuple, ast.List, ast.Dict, ast.Set,
+                         ast.ListComp, ast.GeneratorExp, ast.DictComp,
+                         ast.JoinedStr)):
+        return True                   # container structure is trace-static
+    if isinstance(node, ast.Subscript):
+        return _is_static(node.value, taint, static)
+    if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare)):
+        return all(_is_static(c, taint, static)
+                   for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+    if isinstance(node, ast.UnaryOp):
+        return _is_static(node.operand, taint, static)
+    if isinstance(node, ast.Call):
+        fname = _call_name(node.func)
+        if fname in ("len", "range", "enumerate", "zip", "list", "tuple",
+                     "dict", "int", "min", "max", "sorted"):
+            return all(_is_static(a, taint, static) for a in node.args)
+    return False
+
+
+def _tainted_names(node: ast.AST, taint: set, static: set) -> List[str]:
+    """Tainted (traced) names inside ``node``, pruning subtrees whose value
+    is trace-static: ``is``/``is not`` comparisons (``x is None`` tests the
+    python binding, not the value) and ``.shape``/``.ndim``/``.dtype``/
+    ``.size`` attribute reads."""
+    hits: List[str] = []
+
+    def rec(n):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            return
+        if isinstance(n, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+            return
+        if isinstance(n, ast.Compare) and all(
+                isinstance(op, (ast.In, ast.NotIn)) for op in n.ops) and \
+                isinstance(n.left, ast.Constant) and \
+                isinstance(n.left.value, str):
+            return                    # '"key" in pytree': structural test
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "dtype", "size"):
+            return
+        if isinstance(n, ast.Name) and n.id in taint and n.id not in static:
+            hits.append(n.id)
+        for c in ast.iter_child_nodes(n):
+            rec(c)
+
+    rec(node)
+    return hits
+
+
+def _callee_taint(call: ast.Call, fndef: ast.FunctionDef, taint: set,
+                  static: set) -> frozenset:
+    """Which of ``fndef``'s parameters receive a traced value at this call
+    site — static config passed positionally stays untainted."""
+    params = [a.arg for a in fndef.args.posonlyargs + fndef.args.args]
+    kwonly = {a.arg for a in fndef.args.kwonlyargs}
+    t: set = set()
+
+    def dirty(expr):
+        return bool(_tainted_names(expr, taint, static)) and \
+            not _is_static(expr, taint, static)
+
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            if dirty(arg.value):      # *args forwarding: conservative
+                t.update(params[i:])
+                if fndef.args.vararg is not None:
+                    t.add(fndef.args.vararg.arg)
+            continue
+        if dirty(arg):
+            if i < len(params):
+                t.add(params[i])
+            elif fndef.args.vararg is not None:
+                t.add(fndef.args.vararg.arg)
+    for kw in call.keywords:
+        if kw.arg is not None and dirty(kw.value) and \
+                (kw.arg in params or kw.arg in kwonly):
+            t.add(kw.arg)
+    return frozenset(t)
+
+
+class TracerLeak(Rule):
+    name = "tracer-leak"
+    contract = ("no python branching or float/int/bool/len coercion on "
+                "traced values inside lax.scan bodies and Pallas kernel "
+                "functions (including their same-module callees)")
+    OPS = ("float", "int", "bool", "len")
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        if not mod.relpath.startswith("src/"):
+            return []
+        idx = _ModuleIndex(mod)
+        queue: List[Tuple[ast.FunctionDef, frozenset]] = []
+        for node, stack in _walk_scoped(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node.func)
+            if name in ("scan", "pallas_call") and node.args:
+                for fn in idx.resolve_fn(node.args[0], stack):
+                    # every positional param of a scan body / kernel fn
+                    # carries a tracer (carry/xs slices, Refs); keyword-only
+                    # params are static config bound via functools.partial
+                    seed = {a.arg for a in fn.args.posonlyargs
+                            + fn.args.args}
+                    if fn.args.vararg is not None:
+                        seed.add(fn.args.vararg.arg)
+                    queue.append((fn, frozenset(seed)))
+        out: List[Violation] = []
+        analyzed: Dict[int, frozenset] = {}
+        flagged: set = set()
+        while queue:
+            fn, taint_in = queue.pop()
+            prev = analyzed.get(id(fn), frozenset())
+            if taint_in <= prev:
+                continue
+            analyzed[id(fn)] = prev | taint_in
+            queue.extend(self._check_fn(fn, prev | taint_in, idx, mod, out,
+                                        flagged))
+        return out
+
+    def _check_fn(self, fn, taint_in: frozenset, idx: _ModuleIndex,
+                  mod: ModuleInfo, out: List[Violation], flagged: set
+                  ) -> List[Tuple[ast.FunctionDef, frozenset]]:
+        taint = set(taint_in)
+        static: set = set()
+        scope = idx.def_scope[id(fn)]
+        callees: List[Tuple[ast.FunctionDef, frozenset]] = []
+
+        def flag(node, what):
+            key = (node.lineno, node.col_offset, what)
+            if key in flagged:
+                return                # fn re-analyzed with a wider taint
+            flagged.add(key)
+            out.append(Violation(
+                self.name, mod.relpath, node.lineno,
+                f"{what} on a traced value inside a scan body / kernel fn "
+                "— this reads the tracer at trace time and either crashes "
+                "or silently bakes in one branch"))
+
+        def mark_target(tgt, is_static):
+            if isinstance(tgt, ast.Name):
+                (static.add if is_static else taint.add)(tgt.id)
+                if not is_static:
+                    static.discard(tgt.id)
+            elif isinstance(tgt, ast.Starred):
+                # *rest of a tuple unpack is a real python list at trace
+                # time: its truthiness/len are static
+                if isinstance(tgt.value, ast.Name):
+                    static.add(tgt.value.id)
+                    taint.add(tgt.value.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    mark_target(el, is_static)
+
+        def visit(body):
+            for st in body:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(st, (ast.If, ast.While)):
+                    if _tainted_names(st.test, taint, static):
+                        flag(st, "python `if`/`while`")
+                elif isinstance(st, ast.For):
+                    dirty_iter = bool(_tainted_names(st.iter, taint, static))
+                    if dirty_iter:
+                        flag(st, "python `for` iteration")
+                    # iterating a static container yields static items
+                    mark_target(st.target, not dirty_iter)
+                for sub in _walk_own(st):
+                    if isinstance(sub, ast.IfExp) and \
+                            _tainted_names(sub.test, taint, static):
+                        flag(sub, "conditional expression")
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    name = _call_name(sub.func)
+                    if name in self.OPS and any(
+                            _tainted_names(a, taint, static)
+                            for a in sub.args) and not all(
+                            _is_static(a, taint, static) for a in sub.args):
+                        flag(sub, f"{name}() coercion")
+                    elif name is not None:
+                        callees.extend(
+                            (d, _callee_taint(sub, d, taint, static))
+                            for d in idx.resolve_fn(sub.func, scope))
+                if isinstance(st, ast.Assign):
+                    is_static = _is_static(st.value, taint, static)
+                    dirty = bool(_tainted_names(st.value, taint, static))
+                    for tgt in st.targets:
+                        if is_static or not dirty:
+                            mark_target(tgt, True)
+                        else:
+                            mark_target(tgt, False)
+                for attr in ("body", "orelse", "finalbody"):
+                    sub_body = getattr(st, attr, None)
+                    if sub_body:
+                        visit(sub_body)
+
+        visit(fn.body)
+        return callees
+
+
+# ---------------------------------------------------------------------------
+# rule 5: codec-literal
+# ---------------------------------------------------------------------------
+
+_codec_names_cache: Optional[frozenset] = None
+
+
+def _codec_names() -> frozenset:
+    """The registered wire-codec names, imported from the live registry
+    (same both-ways philosophy as check_docs's codec table gate)."""
+    global _codec_names_cache
+    if _codec_names_cache is None:
+        sys.path.insert(0, str(REPO / "src"))
+        try:
+            from repro.core.wire_codec import WIRE_CODECS
+            _codec_names_cache = frozenset(WIRE_CODECS)
+        finally:
+            sys.path.pop(0)
+    return _codec_names_cache
+
+
+class CodecLiteral(Rule):
+    name = "codec-literal"
+    contract = ("every string literal flowing into a wire_dtype/codec "
+                "parameter names a codec registered in WIRE_CODECS")
+    KWARGS = {"wire_dtype", "exchange_dtype", "wire"}
+
+    def check(self, mod: ModuleInfo) -> List[Violation]:
+        if not mod.relpath.startswith(("src/repro/", "benchmarks/")):
+            return []
+        out: List[Violation] = []
+
+        def bad(node, literal, where):
+            out.append(Violation(
+                self.name, mod.relpath, node.lineno,
+                f"{where} names {literal!r}, which is not a registered "
+                f"wire codec ({', '.join(sorted(_codec_names()))})"))
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if (kw.arg in self.KWARGS
+                            and isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, str)
+                            and kw.value.value not in _codec_names()):
+                        bad(kw.value, kw.value.value, f"{kw.arg}=")
+                if (_call_name(node.func) == "get_codec" and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0].value, str)
+                        and node.args[0].value not in _codec_names()):
+                    bad(node, node.args[0].value, "get_codec()")
+            elif (isinstance(node, ast.Subscript)
+                  and _call_name(node.value) == "WIRE_CODECS"
+                  and isinstance(node.slice, ast.Constant)
+                  and isinstance(node.slice.value, str)
+                  and node.slice.value not in _codec_names()):
+                bad(node, node.slice.value, "WIRE_CODECS[...]")
+        return out
+
+
+RULES: Dict[str, Rule] = {r.name: r for r in (
+    RngDiscipline(), ShardmapSpecArity(), MergeDtypePurity(), TracerLeak(),
+    CodecLiteral())}

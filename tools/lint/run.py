@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""repro-lint CLI: machine-check the repo's parity contracts.
+
+    python tools/lint/run.py                  # lint src/repro + benchmarks
+    python tools/lint/run.py path/to/file.py  # lint specific files
+    python tools/lint/run.py --rule tracer-leak
+
+Exit status is non-zero when any violation survives its per-line
+suppressions (``# lint: disable=RULE(reason)`` — the reason is mandatory).
+The rules and the invariants they enforce are documented in
+docs/CONTRACTS.md; tools/run_tests.sh runs this before pytest in every
+mode, like tools/check_docs.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+TOOLS = Path(__file__).resolve().parent.parent
+REPO = TOOLS.parent
+sys.path.insert(0, str(TOOLS))
+
+from lint.engine import run_lint          # noqa: E402
+from lint.rules import RULES              # noqa: E402
+
+DEFAULT_DIRS = ("src/repro", "benchmarks")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", help="files to lint (default: "
+                    + ", ".join(DEFAULT_DIRS))
+    ap.add_argument("--rule", action="append", choices=sorted(RULES),
+                    help="run only these rules (may repeat)")
+    args = ap.parse_args(argv)
+
+    files = ([Path(p) for p in args.paths] if args.paths else
+             sorted(fp for d in DEFAULT_DIRS
+                    for fp in (REPO / d).rglob("*.py")))
+    rules = ([RULES[r] for r in args.rule] if args.rule
+             else list(RULES.values()))
+    violations = run_lint(files, REPO, rules)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"repro-lint: {len(violations)} violation(s)")
+        return 1
+    print(f"repro-lint: OK ({len(files)} files, {len(rules)} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

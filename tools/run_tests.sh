@@ -16,8 +16,14 @@
 #                                    cross-engine wire-codec parity probe)
 #                                    fails loudly
 #
-# Every mode first runs tools/check_docs.py, so a doc referencing a removed
-# symbol fails tier 1.
+# Every mode first runs tools/check_docs.py (a doc referencing a removed
+# symbol fails tier 1) and tools/lint/run.py (repro-lint: the parity
+# contracts in docs/CONTRACTS.md — RNG discipline, shard_map spec arity,
+# merge-dtype purity, tracer leaks, codec literals — are machine-checked
+# on every run). --bench-smoke additionally runs the retrace budget gate
+# (tools/lint/retrace_guard.py): the engines must not compile more
+# signatures than their pinned budgets, and a warm rerun must compile
+# nothing.
 #
 # Installs the optional test extras (hypothesis) when an installer and
 # network are available; the suite degrades gracefully without them
@@ -27,6 +33,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python tools/check_docs.py
+python tools/lint/run.py
 
 if ! python -c "import hypothesis" >/dev/null 2>&1; then
     echo "run_tests: hypothesis not installed; trying to install (best-effort)"
@@ -43,6 +50,7 @@ fi
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     python -m pytest -x -q -k "not models and not perf" "$@"
+    python tools/lint/retrace_guard.py
     # snapshot the committed baselines BEFORE the quick benches overwrite
     # them, then fail loudly if the fresh rates regressed past the
     # tolerance band (or a wire-codec parity probe broke)
