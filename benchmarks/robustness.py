@@ -1,0 +1,188 @@
+"""Adversarial-robustness study: fault models x Byzantine fraction x defense.
+
+The paper's failure model (Section VI-A) is benign — drops, delays, churn —
+and gossip learning rides through it. This sweep measures the *adversarial*
+regime layered on top of the same extreme scenario (50% drop, delays
+U[delta, 10*delta], 90%-online churn): a seed-chosen Byzantine subset
+corrupts every model it sends (``repro.core.faults``: sign_flip / amplify /
+zero / random_payload / stale_replay, plus the honest-fault wire bitflip),
+and the receive path optionally screens each incoming payload per merge
+round (``defense=``: none / norm_clip / cosine_gate).
+
+Per (fault, byzantine_frac, defense, N) the sweep records terminal
+fresh/voted error, the delta vs the fault-free baseline at the same N, and
+the engine's fault counters (corrupted sends, gated + clipped receives).
+The headline acceptance number lives in ``derived``: at N=10^4 with 10%
+sign-flip attackers, ``norm_clip`` must recover terminal err_fresh to
+within 2x the fault-free baseline while ``none`` measurably diverges.
+
+A bitwise reference-vs-sharded parity probe runs for EVERY fault model at
+N=1000 on f32 + int8 + int4 wires (the full engine/packing matrix lives in
+tests/test_faults.py) — fault injection that cannot reproduce the
+reference bits on the sharded engine is not a fault model, it is a
+different protocol.
+
+    PYTHONPATH=src python -m benchmarks.robustness [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only robustness
+
+Output: CSV rows (results/benchmarks/) plus the machine-readable
+``BENCH_robustness.json`` at the repo root (guarded by
+tools/check_bench_regression.py in --bench-smoke).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, write_bench_json, write_csv
+
+DIM = 57                       # spambase-sized models (paper Table I)
+BASE_N = 10_000                # the acceptance-criterion population
+PARITY_PROBE_N = 1_000         # bitwise ref-vs-sharded check at this N
+EVAL_NODES = 400               # 4x the default eval subset (less noise)
+ATTACK_FRAC = 0.1              # headline Byzantine fraction
+
+
+def _dataset(n: int, d: int, seed: int = 0):
+    from repro.data.synthetic import make_linear_dataset
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 512, d, noise=0.07, separation=2.5)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def _cfg(n: int, fault, frac: float, defense: str, wire=None):
+    from repro.configs.gossip_linear import GossipLinearConfig
+    return GossipLinearConfig(
+        name=f"robust-{n}", dim=DIM, n_nodes=n, n_test=512,
+        class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
+        drop_prob=0.5, delay_max_cycles=10, online_fraction=0.9,
+        wire_dtype=wire, fault_model=fault,
+        byzantine_frac=frac if fault else 0.0, defense=defense)
+
+
+def _combos(quick: bool):
+    """(n, fault, frac, defense) sweep: the fault-free baseline anchors
+    every N; sign_flip (the headline attack) crosses fractions x all
+    defenses at BASE_N; every other fault runs at the headline fraction
+    with and without norm_clip; full mode scales sign_flip to 10^5/10^6."""
+    from repro.core.faults import FAULT_MODELS
+    combos = [(BASE_N, None, 0.0, "none")]
+    for frac in (ATTACK_FRAC, 0.3):
+        for defense in ("none", "norm_clip", "cosine_gate"):
+            combos.append((BASE_N, "sign_flip", frac, defense))
+    for fault in FAULT_MODELS:
+        if fault == "sign_flip":
+            continue
+        for defense in ("none", "norm_clip"):
+            combos.append((BASE_N, fault, ATTACK_FRAC, defense))
+    if not quick:
+        for n in (100_000, 1_000_000):
+            combos.append((n, None, 0.0, "none"))
+            for defense in ("none", "norm_clip"):
+                combos.append((n, "sign_flip", ATTACK_FRAC, defense))
+    return combos
+
+
+def run(quick: bool = False) -> dict:
+    from repro.core.simulation import run_simulation
+
+    cycles = 30 if quick else 60
+    k_rounds = 8                            # overflow ~ 0, like the paper
+    kw = dict(eval_every=10, seed=0, k_rounds=k_rounds,
+              eval_nodes=EVAL_NODES, engine="sharded")
+
+    rows, json_rows = [], []
+    results: dict = {}
+    data_cache: dict = {}
+    for n, fault, frac, defense in _combos(quick):
+        if n not in data_cache:
+            data_cache[n] = _dataset(n, DIM)
+        X, y, Xt, yt = data_cache[n]
+        cfg = _cfg(n, fault, frac, defense)
+        # warm-up compiles the same chunk fn (chunk length eval_every)
+        run_simulation(cfg, X, y, Xt, yt, cycles=10, **kw)
+        with Timer() as t:
+            res = run_simulation(cfg, X, y, Xt, yt, cycles=cycles, **kw)
+        rate = n * cycles / t.s
+        results[(fault, frac, defense, n)] = res
+        err = res.err_fresh[-1]
+        base = results.get((None, 0.0, "none", n))
+        delta = err - base.err_fresh[-1] if base else 0.0
+        fs = res.fault_stats
+        rows.append((fault or "none", frac, defense, n, cycles,
+                     f"{t.s:.3f}", f"{rate:.0f}", f"{err:.4f}",
+                     f"{res.err_voted[-1]:.4f}", f"{delta:+.4f}",
+                     fs["corrupted"], fs["gated"], fs["clipped"]))
+        json_rows.append(dict(
+            engine="sharded", scenario="extreme",
+            fault_model=fault, byzantine_frac=frac, defense=defense,
+            n_nodes=n, cycles=cycles, seconds=t.s,
+            node_cycles_per_sec=rate, err_fresh=err,
+            err_voted=res.err_voted[-1], err_delta_vs_clean=delta,
+            corrupted=fs["corrupted"], gated=fs["gated"],
+            clipped=fs["clipped"]))
+        print("robustness," + ",".join(str(x) for x in rows[-1]))
+
+    # bitwise cross-engine parity probe for EVERY registered fault model,
+    # on the f32 + int8 + int4 wires, with the norm_clip screen active —
+    # the defended merge path must reproduce the reference bits exactly
+    from repro.core.faults import FAULT_MODELS
+    parity = {}
+    Xp, yp, Xtp, ytp = _dataset(PARITY_PROBE_N, DIM)
+    pkw = dict(cycles=20, eval_every=10, seed=3, k_rounds=k_rounds)
+    for fault in FAULT_MODELS:
+        for wire in (None, "int8", "int4"):
+            cfg = _cfg(PARITY_PROBE_N, fault, ATTACK_FRAC, "norm_clip",
+                       wire=wire)
+            ref = run_simulation(cfg, Xp, yp, Xtp, ytp, **pkw)
+            sh = run_simulation(cfg, Xp, yp, Xtp, ytp, engine="sharded",
+                                **pkw)
+            key = f"{fault}/{wire or 'f32'}"
+            parity[key] = bool(ref.err_fresh == sh.err_fresh
+                               and ref.err_voted == sh.err_voted
+                               and ref.fault_stats == sh.fault_stats)
+            print(f"robustness,parity,{key},{parity[key]}")
+
+    # the acceptance criterion, recorded as found: 10% sign-flip at
+    # N=10^4 — norm_clip recovers to <= 2x the fault-free terminal error
+    # while the undefended run measurably diverges
+    derived: dict = {}
+    clean = results[(None, 0.0, "none", BASE_N)].err_fresh[-1]
+    derived[f"clean_err_at_{BASE_N}"] = clean
+    for defense in ("none", "norm_clip", "cosine_gate"):
+        r = results.get(("sign_flip", ATTACK_FRAC, defense, BASE_N))
+        if r is not None:
+            derived[f"sign_flip_10pct_{defense}_err"] = r.err_fresh[-1]
+            derived[f"sign_flip_10pct_{defense}_ratio_vs_clean"] = (
+                r.err_fresh[-1] / clean if clean > 0 else float("inf"))
+    nc = derived.get("sign_flip_10pct_norm_clip_ratio_vs_clean")
+    un = derived.get("sign_flip_10pct_none_ratio_vs_clean")
+    if nc is not None and un is not None:
+        derived["norm_clip_recovers_within_2x"] = bool(nc <= 2.0)
+        derived["undefended_diverges"] = bool(un > nc)
+        print(f"robustness,acceptance,norm_clip {nc:.2f}x clean "
+              f"(<=2x: {nc <= 2.0}),undefended {un:.2f}x clean")
+
+    write_csv("robustness",
+              "fault_model,byzantine_frac,defense,n_nodes,cycles,seconds,"
+              "node_cycles_per_sec,err_fresh,err_voted,err_delta_vs_clean,"
+              "corrupted,gated,clipped", rows)
+    write_bench_json("robustness", dict(
+        bench="robustness",
+        quick=quick,
+        scenario=dict(drop_prob=0.5, delay_max_cycles=10,
+                      online_fraction=0.9, k_rounds=k_rounds, dim=DIM,
+                      cycles=cycles, variant="mu", cache_size=4,
+                      eval_nodes=EVAL_NODES, engine="sharded"),
+        fault_models=list(FAULT_MODELS),
+        rows=json_rows,
+        parity_bitwise=parity,
+        derived=derived,
+    ))
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(ap.parse_args().quick)

@@ -10,7 +10,7 @@ import time
 
 SUITES = ["table1", "fig1", "fig2", "fig3", "theory", "kernels",
           "gossip_vs_allreduce", "roofline", "population_scaling",
-          "wire_quantization"]
+          "wire_quantization", "robustness"]
 
 
 def main() -> None:
@@ -53,6 +53,9 @@ def main() -> None:
     if "wire_quantization" in only:
         from benchmarks import wire_quantization
         wire_quantization.run(args.quick)
+    if "robustness" in only:
+        from benchmarks import robustness
+        robustness.run(args.quick)
     print(f"benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -15,7 +15,14 @@ one ``lax.scan`` between eval points.
 10% online, 10Δ delays): only a fraction of a percent of the population
 receives per cycle, and the engine's occupancy-based packing switches to the
 delivery-proportional ``compact_all`` path — the printed compaction report
-shows the chunk modes and receiver occupancy the router observed.
+shows the chunk modes and receiver occupancy the router observed. Any key
+of ``FAILURE_SCENARIOS`` is also accepted directly.
+
+``--fault-model sign_flip --byzantine-frac 0.1 --defense norm_clip`` layers
+the adversarial regime (repro.core.faults) on top: a seed-chosen Byzantine
+subset corrupts every send, the receive path screens each payload per merge
+round, and the run prints the engine's fault counters (corrupted sends,
+gated + clipped receives). Measured trade-offs: BENCH_robustness.json.
 
 Expected: the error curve tracks the paper's Fig. 1 shape — at fixed cycle
 count the per-cycle error is population-size-invariant (each node still sees
@@ -29,8 +36,14 @@ import time
 
 import numpy as np
 
-SCENARIOS = {"clean": "clean", "extreme": "extreme",
-             "sparse": "sparse-d0.8-o0.1"}
+# config-layer import only (no jax): the scenario choices come from the
+# single registry in repro.configs.gossip_linear instead of a local copy
+from repro.configs.gossip_linear import FAILURE_SCENARIOS
+
+# short spellings for the most-used operating points; every registered
+# FAILURE_SCENARIOS key is also accepted verbatim
+SCENARIO_ALIASES = {"sparse": "sparse-d0.8-o0.1"}
+SCENARIO_CHOICES = sorted(SCENARIO_ALIASES) + sorted(FAILURE_SCENARIOS)
 
 
 def main() -> None:
@@ -38,11 +51,12 @@ def main() -> None:
     ap.add_argument("--nodes", type=int, default=1_000_000)
     ap.add_argument("--cycles", type=int, default=50)
     ap.add_argument("--dim", type=int, default=10)
-    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+    ap.add_argument("--scenario", choices=SCENARIO_CHOICES, default=None,
                     help="failure operating point: clean (no failures), "
-                         "extreme (drop=0.5, 10 cycle delays, 90%% online) "
-                         "or sparse (drop=0.8, 10%% online — the "
-                         "delivery-proportional compact_all regime)")
+                         "extreme (drop=0.5, 10 cycle delays, 90%% online), "
+                         "sparse (alias for sparse-d0.8-o0.1 — the "
+                         "delivery-proportional compact_all regime), or any "
+                         "registered FAILURE_SCENARIOS key")
     ap.add_argument("--extreme", action="store_true",
                     help="alias for --scenario extreme")
     ap.add_argument("--wire-dtype",
@@ -55,8 +69,27 @@ def main() -> None:
                          "codes/byte) or base-3 ternary (5 codes/byte); "
                          "the _ef variants add sender-side error-feedback "
                          "residuals. Merge math stays f32")
+    ap.add_argument("--fault-model",
+                    choices=["sign_flip", "amplify", "zero",
+                             "random_payload", "stale_replay", "bitflip"],
+                    default=None,
+                    help="adversarial fault model (repro.core.faults): a "
+                         "seed-chosen Byzantine subset corrupts every model "
+                         "it sends (bitflip corrupts the encoded wire "
+                         "bytes instead). Default: no fault injection")
+    ap.add_argument("--byzantine-frac", type=float, default=0.1,
+                    help="fraction of nodes applying the fault "
+                         "(only with --fault-model; default 0.1)")
+    ap.add_argument("--defense",
+                    choices=["none", "norm_clip", "cosine_gate"],
+                    default="none",
+                    help="receive-side payload screen, applied per merge "
+                         "round: norm_clip rescales oversized payloads to "
+                         "a multiple of the receiver's own norm, "
+                         "cosine_gate rejects anti-aligned ones")
     args = ap.parse_args()
     scenario = args.scenario or ("extreme" if args.extreme else "clean")
+    scenario = SCENARIO_ALIASES.get(scenario, scenario)
 
     from repro.configs.gossip_linear import (GossipLinearConfig,
                                              with_failure_scenario)
@@ -73,8 +106,10 @@ def main() -> None:
         GossipLinearConfig(
             name=f"million-{n}", dim=d, n_nodes=n, n_test=1000,
             class_ratio=(1, 1), lam=1e-3, variant="mu", cache_size=4,
-            wire_dtype=wire),
-        SCENARIOS[scenario])
+            wire_dtype=wire, fault_model=args.fault_model,
+            byzantine_frac=args.byzantine_frac if args.fault_model else 0.0,
+            defense=args.defense),
+        scenario)
 
     print(f"N={n:,} peers (one record each), d={d}, "
           f"{args.cycles} cycles, variant=MU, "
@@ -83,6 +118,10 @@ def main() -> None:
           f"scenario={scenario} "
           f"(drop={cfg.drop_prob}, delay<= {cfg.delay_max_cycles} cycles, "
           f"online={cfg.online_fraction:.0%})")
+    if cfg.fault_model:
+        print(f"adversary: {cfg.fault_model} from "
+              f"{cfg.byzantine_frac:.0%} Byzantine nodes, "
+              f"defense={cfg.defense}")
     t0 = time.time()
     res = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:],
                          cycles=args.cycles,
@@ -102,6 +141,11 @@ def main() -> None:
         print(f"error feedback: terminal EF-residual norm "
               f"{res.ef_residual_norm:.4f} (RMS per-node L2; the residual "
               f"each sender still owes the wire)")
+    if cfg.fault_model:
+        fs = res.fault_stats
+        print(f"fault stats: {fs['corrupted']:,} corrupted sends, "
+              f"{fs['gated']:,} receives gated, "
+              f"{fs['clipped']:,} receives clipped by {cfg.defense}")
 
     # compaction observability: what the router saw, what the engine chose
     dpc = np.asarray(res.delivered_per_cycle, dtype=np.float64)

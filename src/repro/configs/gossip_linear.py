@@ -68,6 +68,23 @@ class GossipLinearConfig:
       representation changes. Measured trade-offs:
       ``BENCH_wire_quantization.json`` and docs/ENGINES.md.
 
+    Adversarial faults + defenses (beyond-paper, ``repro.core.faults``):
+
+    * ``fault_model``: name of a registered fault model (``None`` = no
+      fault injection, the default — fault-free runs are bitwise identical
+      to the pre-fault engines). Model-kind faults ("sign_flip",
+      "amplify", "zero", "random_payload", "stale_replay") make the
+      Byzantine subset lie about its transmitted model before the wire
+      encode; the wire-kind "bitflip" flips one bit of the encoded
+      payload bytes after it.
+    * ``byzantine_frac``: fraction of nodes (seed-chosen, static per run)
+      that apply the fault on every send.
+    * ``defense``: receive-side payload screen applied per merge round —
+      "none", "norm_clip" (clip incoming L2 to a multiple of the
+      receiver's own norm) or "cosine_gate" (reject payloads
+      anti-aligned with the local model). Measured trade-offs:
+      ``BENCH_robustness.json`` and docs/ENGINES.md.
+
     * ``citation``: provenance of the experimental setup."""
     name: str
     dim: int
@@ -83,6 +100,9 @@ class GossipLinearConfig:
     delay_max_cycles: int = 1
     online_fraction: float = 1.0
     wire_dtype: Optional[str] = None
+    fault_model: Optional[str] = None
+    byzantine_frac: float = 0.0
+    defense: str = "none"
     citation: str = "[DOI:10.1002/cpe.2858]"
 
 
@@ -122,10 +142,24 @@ FAILURE_SCENARIOS = {
 
 def with_failure_scenario(cfg: GossipLinearConfig,
                           scenario: str) -> GossipLinearConfig:
-    """A copy of ``cfg`` with the named failure operating point applied."""
+    """A copy of ``cfg`` with the named failure operating point applied.
+
+    Every key of the scenario dict is validated against the
+    ``GossipLinearConfig`` fields at apply time: a typo'd key in a
+    scenario dict used to surface only as ``dataclasses.replace``'s
+    generic TypeError (or, with ``**``-merging callers, silently) — now
+    it fails loudly naming the offending keys."""
     try:
-        return dataclasses.replace(cfg, **FAILURE_SCENARIOS[scenario])
+        overrides = FAILURE_SCENARIOS[scenario]
     except KeyError:
         raise ValueError(f"unknown failure scenario {scenario!r} "
                          f"(expected one of {sorted(FAILURE_SCENARIOS)})"
                          ) from None
+    known = {f.name for f in dataclasses.fields(GossipLinearConfig)}
+    bad = sorted(set(overrides) - known)
+    if bad:
+        raise ValueError(
+            f"failure scenario {scenario!r} overrides unknown "
+            f"GossipLinearConfig field(s) {bad} "
+            f"(known fields: {sorted(known)})")
+    return dataclasses.replace(cfg, **overrides)

@@ -53,6 +53,16 @@ def freshest(cache: ModelCache):
     return cache.w[rows, slot], cache.t[rows, slot]
 
 
+def cache_oldest(cache: ModelCache):
+    """The oldest still-valid model per node (slot ``ptr - count``) — what
+    a ``stale_replay`` Byzantine node retransmits: its model from
+    ~``cache_size`` receives ago, with the stale counter riding along."""
+    n, c, d = cache.w.shape
+    rows = jnp.arange(n)
+    slot = (cache.ptr - cache.count) % c
+    return cache.w[rows, slot], cache.t[rows, slot]
+
+
 def predict_fresh(cache: ModelCache, X):
     """PREDICT for every node over a test matrix X (m, d) -> (N, m) signs."""
     w, _ = freshest(cache)                      # (N, d)

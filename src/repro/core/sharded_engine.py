@@ -81,6 +81,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
+from repro.core import faults as faults_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
 from repro.core.learners import LinearModel, make_update
@@ -391,7 +392,8 @@ def pack_compact_all(win, recv, T: int, K: int, n: int, width: int,
 
 
 def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
-                  msg_w, msg_t, valid, X, y, *, variant: str, update):
+                  msg_w, msg_t, valid, X, y, *, variant: str, update,
+                  defense: str = "none"):
     """Scatter-free receive application (Algorithm 1 ON RECEIVE, K rounds).
 
     Bitwise-equal to ``simulation.apply_receives`` but restructured for
@@ -404,7 +406,14 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
 
     Payloads arrive in the wire dtype (bf16/f16 when ``cfg.wire_dtype`` is
     set); all merge/update arithmetic runs in f32 — the same contract as
-    ``gossip_merge``'s ``exchange_dtype``. A no-op for f32 payloads."""
+    ``gossip_merge``'s ``exchange_dtype``. A no-op for f32 payloads.
+
+    ``defense`` screens each round against the receiver's current chain
+    model (``faults.apply_defense``, same semantics and op order as the
+    reference ``apply_receives``): a rejected message drops out of the
+    round's ``vm`` mask, a clipped one continues the chain rescaled.
+    Returns ``(last_w, last_t, fresh_w, fresh_t, cache, gated, clipped)``
+    with (N,) int32 per-node screen counts (zeros under ``"none"``)."""
     msg_w = msg_w.astype(jnp.float32)
     K, n, d = msg_w.shape
     C = cache.w.shape[1]
@@ -418,10 +427,15 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
     off = jnp.zeros((n,), jnp.int32)
     sel = jnp.full((n, C), -1, jnp.int32)
     last_k = jnp.zeros((n,), jnp.int32)
+    gated = jnp.zeros((n,), jnp.int32)
+    clipped = jnp.zeros((n,), jnp.int32)
     new_ws, new_ts = [], []
     for k in range(K):
-        vm = valid[k]
-        new = create_model(variant, update, LinearModel(msg_w[k], msg_t[k]),
+        mw, vm, g, cl = faults_mod.apply_defense(
+            defense, msg_w[k], valid[k], prev_w)
+        gated = gated + g.astype(jnp.int32)
+        clipped = clipped + cl.astype(jnp.int32)
+        new = create_model(variant, update, LinearModel(mw, msg_t[k]),
                            LinearModel(prev_w, prev_t), X, y)
         new_ws.append(new.w)
         new_ts.append(new.t)
@@ -431,7 +445,7 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
         sel = jnp.where((iota_c == slot_k[:, None]) & vm[:, None], k, sel)
         off = off + vm.astype(jnp.int32)
         last_k = jnp.where(vm, k, last_k)
-        prev_w = jnp.where(vm[:, None], msg_w[k], prev_w)
+        prev_w = jnp.where(vm[:, None], mw, prev_w)
         prev_t = jnp.where(vm, msg_t[k], prev_t)
 
     new_w = jnp.stack(new_ws)                           # (K, n, d)
@@ -446,31 +460,33 @@ def _vector_apply(last_w, last_t, fresh_w, fresh_t, cache: ModelCache,
     got_any = off > 0
     fw = jnp.where(got_any[:, None], new_w[last_k, rows], fresh_w)
     ft = jnp.where(got_any, new_t[last_k, rows], fresh_t)
-    return prev_w, prev_t, fw, ft, new_cache
+    return prev_w, prev_t, fw, ft, new_cache, gated, clipped
 
 
-def _pallas_apply(lam: float, interpret: bool, wire):
+def _pallas_apply(lam: float, interpret: bool, wire, defense: str = "none"):
     """Receive application backed by the fused Pallas gossip-cycle kernel.
 
     Quantized wire payloads pass straight through: ``msg_w`` stays in the
     codec's packed representation and the per-message f16 ``msg_scale``
     (plus ``msg_zp`` for the affine int8 family) ride along — the kernel
     decodes in VMEM (affine dequant, int4 nibble unpack, base-3 ternary
-    unpack), so HBM message traffic is paid at wire precision."""
+    unpack), so HBM message traffic is paid at wire precision. The
+    ``defense`` screen runs in-kernel between the decode and the merge
+    (same round-chain placement as the jnp paths)."""
     from repro.kernels.gossip_cycle import fused_receive_apply
 
     def apply_fn(last_w, last_t, fresh_w, fresh_t, cache, msg_w, msg_t,
                  valid, X, y, *, variant, update, msg_scale=None,
                  msg_zp=None):
         del update  # the kernel implements the Pegasos step itself
-        lw, lt, cw, ct, ptr, cnt = fused_receive_apply(
+        lw, lt, cw, ct, ptr, cnt, gated, clipped = fused_receive_apply(
             last_w, last_t, cache.w, cache.t, cache.ptr, cache.count,
             msg_w, msg_t, valid.astype(jnp.int32), X, y,
             msg_scale=msg_scale, msg_zp=msg_zp, wire=wire,
-            variant=variant, lam=lam, interpret=interpret)
+            variant=variant, lam=lam, interpret=interpret, defense=defense)
         new_cache = ModelCache(cw, ct, ptr, cnt)
         fw, ft = cache_mod.freshest(new_cache)
-        return lw, lt, fw, ft, new_cache
+        return lw, lt, fw, ft, new_cache, gated, clipped
 
     return apply_fn
 
@@ -494,10 +510,11 @@ def _shard_apply(base_apply, mesh, axis: str):
         def inner(lw, lt, fw, ft, cw, ct, cp, cc, mw, mt, vl, Xs, ys,
                   *meta_vals):
             kw = dict(zip((k for k, _ in meta), meta_vals))
-            lw2, lt2, fw2, ft2, c2 = base_apply(
+            lw2, lt2, fw2, ft2, c2, g2, cl2 = base_apply(
                 lw, lt, fw, ft, ModelCache(cw, ct, cp, cc), mw, mt, vl,
                 Xs, ys, variant=variant, update=update, **kw)
-            return lw2, lt2, fw2, ft2, c2.w, c2.t, c2.ptr, c2.count
+            return (lw2, lt2, fw2, ft2, c2.w, c2.t, c2.ptr, c2.count,
+                    g2, cl2)
 
         in_specs = (ps_n,) * 8 + (ps_kn,) * 3 + (ps_n,) * 2 \
             + (ps_kn,) * len(meta)
@@ -505,9 +522,9 @@ def _shard_apply(base_apply, mesh, axis: str):
                 cache.ptr, cache.count, msg_w, msg_t, valid, X, y] \
             + [v for _, v in meta]
         f = shard_map_compat(inner, mesh=mesh, in_specs=in_specs,
-                             out_specs=(ps_n,) * 8)
-        lw2, lt2, fw2, ft2, cw, ct, cp, cc = f(*args)
-        return lw2, lt2, fw2, ft2, ModelCache(cw, ct, cp, cc)
+                             out_specs=(ps_n,) * 10)
+        lw2, lt2, fw2, ft2, cw, ct, cp, cc, g2, cl2 = f(*args)
+        return lw2, lt2, fw2, ft2, ModelCache(cw, ct, cp, cc), g2, cl2
 
     return apply_fn
 
@@ -535,7 +552,9 @@ def retrace_counts() -> Dict[str, int]:
 def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     delay_max: int, use_pallas: bool, interpret: bool,
                     mesh, axis: Optional[str], mode: str,
-                    wire: Optional[str], use_send_kernel: bool):
+                    wire: Optional[str], use_send_kernel: bool,
+                    fault_model: Optional[str] = None,
+                    defense: str = "none"):
     """Jitted data-plane chunk runner, cached per configuration.
 
     Caching the jitted callable (rather than rebuilding the closure per
@@ -575,10 +594,22 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     routes the send-side quantization through the fused Pallas
     ``quantize_send`` kernel (in-kernel threefry for the SR draw; fused
     pack + EF-residual output for the sub-4-bit codecs) instead of the jnp
-    codec ops — bitwise-identical by contract."""
+    codec ops — bitwise-identical by contract.
+
+    ``fault_model``/``defense`` (static, from ``cfg``) thread
+    ``repro.core.faults`` through the data plane: model-kind faults
+    corrupt the Byzantine rows' ``(send_w, send_t)`` before the wire
+    encode (``compact_all`` corrupts only the sender subset,
+    ``rows=``-exact), the wire-kind "bitflip" rewrites the encoded
+    payload after the EF-residual update, and the defense screen runs
+    per round inside every apply path. The fault key is the reference
+    engine's ``fault_key`` fold-in from the scanned cycle key, so both
+    engines draw identical corruption — and fault-free chunk fns are
+    built with ``fault_model=None``, leaving their traces unchanged."""
     update = make_update(learner, lam=lam, eta=eta)
-    apply_fn = (_pallas_apply(lam, interpret, wire) if use_pallas
-                else _vector_apply)
+    fault = faults_mod.get_fault(fault_model)
+    apply_fn = (_pallas_apply(lam, interpret, wire, defense) if use_pallas
+                else functools.partial(_vector_apply, defense=defense))
     if mesh is not None and axis is not None:
         apply_fn = _shard_apply(apply_fn, mesh, axis)
     if mode != "dense" and use_pallas:
@@ -589,7 +620,8 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     if use_send_kernel:
         from repro.kernels.gossip_cycle import quantize_send
 
-    def chunk_fn(carry, tables, keydata, X, y, X_test, y_test, eval_idx):
+    def chunk_fn(carry, tables, keydata, X, y, X_test, y_test, eval_idx,
+                 byz):
         def records(clock):
             if X.ndim == 3:                   # multi-record nodes
                 rec = clock % X.shape[1]
@@ -613,42 +645,68 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                 return msg_w, extra
             return codec.decode(msg_w, msc, mzp, d), {}
 
-        def send(buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd, smask):
+        def send(buf_w, buf_scale, buf_zp, ef, send_w, clock, kd, smask):
             """Refresh this cycle's buffer row (encoding on the way in).
 
+            ``send_w`` is the (possibly fault-corrupted) transmitted model;
             ``smask`` (the router's per-cycle ``arrival >= 0`` == the
             reference engine's ``send_ok``) gates the EF-residual refresh;
-            it is only scanned when the codec keeps EF state."""
+            it is only scanned when the codec keeps EF state. The
+            wire-kind "bitflip" fault rewrites the payload AFTER the
+            EF-residual update — the honest sender's bookkeeping is
+            computed from what it encoded, not what the channel delivers
+            (same ordering as ``cycle_core``)."""
             row = clock % D
-            x = fresh_w + ef if codec.ef else fresh_w
+            x = send_w + ef if codec.ef else send_w
             if not codec.quantized:
-                return (buf_w.at[row].set(x.astype(buf_w.dtype)),
-                        buf_scale, buf_zp, ef)
-            key = None
-            if codec.stochastic:
-                # k_recv: slot 0 of the reference engine's per-cycle split
-                key = jax.random.split(jax.random.wrap_key_data(kd), 4)[0]
-            if use_send_kernel:
-                outs = quantize_send(
-                    fresh_w, wire,
-                    key_data=(jax.random.key_data(key) if codec.stochastic
-                              else None),
-                    ef=ef if codec.ef else None, interpret=interpret)
-                if codec.has_zp:
-                    q, sc, zp = outs
-                elif codec.ef:
-                    (q, sc), zp = outs[:2], None
-                    resid = outs[2]
-                else:
-                    (q, sc), zp = outs, None
+                q, sc, zp = x.astype(buf_w.dtype), None, None
             else:
-                q, sc, zp = codec.encode(x, key=key)
+                key = None
+                if codec.stochastic:
+                    # k_recv: slot 0 of the reference per-cycle split
+                    key = jax.random.split(
+                        jax.random.wrap_key_data(kd), 4)[0]
+                if use_send_kernel:
+                    outs = quantize_send(
+                        send_w, wire,
+                        key_data=(jax.random.key_data(key)
+                                  if codec.stochastic else None),
+                        ef=ef if codec.ef else None, interpret=interpret)
+                    if codec.has_zp:
+                        q, sc, zp = outs
+                    elif codec.ef:
+                        (q, sc), zp = outs[:2], None
+                        resid = outs[2]
+                    else:
+                        (q, sc), zp = outs, None
+                else:
+                    q, sc, zp = codec.encode(x, key=key)
+                    if codec.ef:
+                        resid = x - codec.decode(q, sc, zp,
+                                                 send_w.shape[-1])
                 if codec.ef:
-                    resid = x - codec.decode(q, sc, zp, fresh_w.shape[-1])
-            if codec.ef:
-                ef = jnp.where(smask[:, None], resid, ef)
+                    ef = jnp.where(smask[:, None], resid, ef)
+            if fault is not None and fault.kind == "wire":
+                q = faults_mod.bitflip_payload(
+                    byz, faults_mod.fault_key(jax.random.wrap_key_data(kd)),
+                    q)
+            if not codec.quantized:
+                return buf_w.at[row].set(q), buf_scale, buf_zp, ef
             return (buf_w.at[row].set(q), buf_scale.at[row].set(sc),
                     buf_zp.at[row].set(zp) if codec.has_zp else buf_zp, ef)
+
+        def corrupt_send(fresh_w, fresh_t, cache, kd):
+            """Model-kind fault: the Byzantine rows' transmitted model —
+            a static no-op when faults are off or wire-kind."""
+            if fault is None or fault.kind != "model":
+                return fresh_w, fresh_t
+            old_w = old_t = None
+            if fault.name == "stale_replay":
+                old_w, old_t = cache_mod.cache_oldest(cache)
+            return faults_mod.corrupt_model(
+                fault, byz, faults_mod.fault_key(
+                    jax.random.wrap_key_data(kd)),
+                fresh_w, fresh_t, old_w, old_t)
 
         def dense_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
@@ -660,17 +718,19 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             Xc, yc = records(clock)
             msg_w, extra = gather(buf_w, buf_scale, buf_zp, idx, d)
             msg_t = buf_t.reshape(-1)[idx]
-            last_w, last_t, fresh_w, fresh_t, cache = apply_fn(
-                last_w, last_t, fresh_w, fresh_t,
-                ModelCache(cw, ct, ptr, cnt), msg_w, msg_t, valid, Xc, yc,
-                variant=variant, update=update, **extra)
+            last_w, last_t, fresh_w, fresh_t, cache, gated, clipped = \
+                apply_fn(
+                    last_w, last_t, fresh_w, fresh_t,
+                    ModelCache(cw, ct, ptr, cnt), msg_w, msg_t, valid,
+                    Xc, yc, variant=variant, update=update, **extra)
+            send_w, send_t = corrupt_send(fresh_w, fresh_t, cache, kd)
             buf_w, buf_scale, buf_zp, ef = send(
-                buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd,
+                buf_w, buf_scale, buf_zp, ef, send_w, clock, kd,
                 sm[0] if sm else None)
-            buf_t = buf_t.at[clock % D].set(fresh_t)
+            buf_t = buf_t.at[clock % D].set(send_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    ef, clock + 1), None
+                    ef, clock + 1), (jnp.sum(gated), jnp.sum(clipped))
 
         def subset_apply(state, ridx, rslot, Xc, yc, buf_w, buf_scale,
                          buf_zp, flat_t):
@@ -688,7 +748,7 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             sub = ModelCache(cache.w[gi], cache.t[gi], cache.ptr[gi],
                              cache.count[gi])
             msg_w, _ = gather(buf_w, buf_scale, buf_zp, sc, d)
-            lw2, lt2, fw2, ft2, sub2 = apply_fn(
+            lw2, lt2, fw2, ft2, sub2, g2, cl2 = apply_fn(
                 last_w[gi], last_t[gi], fresh_w[gi], fresh_t[gi], sub,
                 msg_w, flat_t[sc], vc, Xc[gi], yc[gi],
                 variant=variant, update=update)
@@ -702,7 +762,10 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                                cache.ptr.at[si].set(sub2.ptr, mode="drop"),
                                cache.count.at[si].set(sub2.count,
                                                       mode="drop"))
-            return last_w, last_t, fresh_w, fresh_t, cache
+            # pad rows carry valid=False everywhere, so their screen
+            # counts are structurally zero — a plain sum is exact
+            return (last_w, last_t, fresh_w, fresh_t, cache,
+                    jnp.sum(g2), jnp.sum(cl2))
 
         def compact_body(carry, inp):
             (last_w, last_t, fresh_w, fresh_t, cw, ct, ptr, cnt,
@@ -714,26 +777,27 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             # round 1, dense over all nodes (same math as a K=1 dense apply)
             i0 = jnp.maximum(src0, 0)
             msg_w0, _ = gather(buf_w, buf_scale, buf_zp, i0[None], d)
-            last_w, last_t, fresh_w, fresh_t, cache = apply_fn(
+            last_w, last_t, fresh_w, fresh_t, cache, g0, cl0 = apply_fn(
                 last_w, last_t, fresh_w, fresh_t,
                 ModelCache(cw, ct, ptr, cnt), msg_w0,
                 flat_t[i0][None], (src0 >= 0)[None], Xc, yc,
                 variant=variant, update=update)
             # rounds >= 2: continue the chain on the multi-receiver subset
             # (their lastModel already holds the round-1 message)
-            last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
+            last_w, last_t, fresh_w, fresh_t, cache, g2, cl2 = subset_apply(
                 (last_w, last_t, fresh_w, fresh_t, cache), ridx, rslot,
                 Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
+            send_w, send_t = corrupt_send(fresh_w, fresh_t, cache, kd)
             buf_w, buf_scale, buf_zp, ef = send(
-                buf_w, buf_scale, buf_zp, ef, fresh_w, clock, kd,
+                buf_w, buf_scale, buf_zp, ef, send_w, clock, kd,
                 sm[0] if sm else None)
-            buf_t = buf_t.at[clock % D].set(fresh_t)
+            buf_t = buf_t.at[clock % D].set(send_t)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    ef, clock + 1), None
+                    ef, clock + 1), (jnp.sum(g0) + g2, jnp.sum(cl0) + cl2)
 
         def send_compact(buf_w, buf_t, buf_scale, buf_zp, ef, fresh_w,
-                         fresh_t, clock, kd, sidx):
+                         fresh_t, clock, kd, sidx, cache):
             """Refresh only the SENDERS' slots of this cycle's buffer row.
 
             In sparse regimes most nodes are offline or drop their send;
@@ -745,16 +809,31 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             to the dense ``jax.random.uniform`` draw at those rows; the
             ``_ef`` codecs gather/refresh/scatter only the senders'
             residual rows — exactly the rows the reference engine's
-            ``send_ok`` mask refreshes."""
+            ``send_ok`` mask refreshes. Fault corruption stays
+            sender-proportional too: model-kind faults corrupt the
+            gathered subset (``rows=gi`` regenerates the dense
+            ``random_payload`` draw at the senders' global rows), the
+            wire-kind bitflip flips the subset's encoded payloads — both
+            bitwise-equal to the reference engine at the routed rows."""
             n, d = fresh_w.shape
             pad = sidx < 0
             gi = jnp.maximum(sidx, 0)
             si = jnp.where(pad, n, gi)        # out of bounds => dropped
             row = clock % D
-            sub_x = fresh_w[gi] + ef[gi] if codec.ef else fresh_w[gi]
+            send_w, send_t = fresh_w[gi], fresh_t[gi]
+            if fault is not None and fault.kind == "model":
+                old_w = old_t = None
+                if fault.name == "stale_replay":
+                    old_w, old_t = cache_mod.cache_oldest(ModelCache(
+                        cache.w[gi], cache.t[gi], cache.ptr[gi],
+                        cache.count[gi]))
+                send_w, send_t = faults_mod.corrupt_model(
+                    fault, byz[gi], faults_mod.fault_key(
+                        jax.random.wrap_key_data(kd)),
+                    send_w, send_t, old_w, old_t, rows=gi, n_total=n)
+            sub_x = send_w + ef[gi] if codec.ef else send_w
             if not codec.quantized:
-                buf_w = buf_w.at[row, si].set(
-                    sub_x.astype(buf_w.dtype), mode="drop")
+                q = sub_x.astype(buf_w.dtype)
             else:
                 noise = None
                 if codec.stochastic:
@@ -765,11 +844,17 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                 if codec.ef:
                     resid = sub_x - codec.decode(q, sc, zp, d)
                     ef = ef.at[si].set(resid, mode="drop")
-                buf_w = buf_w.at[row, si].set(q, mode="drop")
+            if fault is not None and fault.kind == "wire":
+                q = faults_mod.bitflip_payload(
+                    byz[gi], faults_mod.fault_key(
+                        jax.random.wrap_key_data(kd)),
+                    q, rows=gi, n_total=n)
+            buf_w = buf_w.at[row, si].set(q, mode="drop")
+            if codec.quantized:
                 buf_scale = buf_scale.at[row, si].set(sc, mode="drop")
                 if codec.has_zp:
                     buf_zp = buf_zp.at[row, si].set(zp, mode="drop")
-            buf_t = buf_t.at[row, si].set(fresh_t[gi], mode="drop")
+            buf_t = buf_t.at[row, si].set(send_t, mode="drop")
             return buf_w, buf_t, buf_scale, buf_zp, ef
 
         def compact_all_body(carry, inp):
@@ -783,30 +868,35 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
             # delivery-proportional (the sparse-delivery hot path) — and
             # the send refresh (buffer slots AND EF residuals) is
             # sender-proportional to match
-            last_w, last_t, fresh_w, fresh_t, cache = subset_apply(
+            last_w, last_t, fresh_w, fresh_t, cache, g2, cl2 = subset_apply(
                 (last_w, last_t, fresh_w, fresh_t,
                  ModelCache(cw, ct, ptr, cnt)), ridx, rslot,
                 Xc, yc, buf_w, buf_scale, buf_zp, flat_t)
             buf_w, buf_t, buf_scale, buf_zp, ef = send_compact(
                 buf_w, buf_t, buf_scale, buf_zp, ef, fresh_w, fresh_t,
-                clock, kd, sidx)
+                clock, kd, sidx, cache)
             return (last_w, last_t, fresh_w, fresh_t, cache.w, cache.t,
                     cache.ptr, cache.count, buf_w, buf_t, buf_scale, buf_zp,
-                    ef, clock + 1), None
+                    ef, clock + 1), (g2, cl2)
 
         body = {"dense": dense_body, "compact": compact_body,
                 "compact_all": compact_all_body}[mode]
-        carry, _ = lax.scan(body, carry, (tables, keydata))
+        carry, (g_cycles, cl_cycles) = lax.scan(body, carry,
+                                                (tables, keydata))
         cache = ModelCache(carry[4], carry[5], carry[6], carry[7])
         errs = _eval(cache, eval_idx, X_test, y_test)
-        return carry, errs
+        return carry, (errs, (jnp.sum(g_cycles), jnp.sum(cl_cycles)))
 
     jitted = jax.jit(chunk_fn, donate_argnums=(0,))
     # the index prefix keeps labels unique when configs differ only in a
-    # field the label omits (lam, eta, mesh, ...)
+    # field the label omits (lam, eta, mesh, ...); the fault/defense
+    # suffixes appear only when active, so fault-free runs keep their
+    # pre-fault labels (and retrace budgets)
     label = (f"{len(_CHUNK_FNS)}:{variant}/{learner}/{mode}/{wire or 'f32'}"
              + ("/pallas" if use_pallas else "")
-             + ("/sendk" if use_send_kernel else ""))
+             + ("/sendk" if use_send_kernel else "")
+             + (f"/fault:{fault_model}" if fault_model else "")
+             + (f"/def:{defense}" if defense != "none" else ""))
     _CHUNK_FNS[label] = jitted
     return jitted
 
@@ -921,10 +1011,18 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             raise ValueError("the Pallas send kernel does not run under a "
                              "node mesh")
 
+    faults_mod.check_defense(cfg.defense)
+    byz = byz_np = None
+    if cfg.fault_model is not None:
+        faults_mod.get_fault(cfg.fault_model)   # fail fast on unknown names
+        byz_np = faults_mod.byzantine_mask(seed, n, cfg.byzantine_frac)
+        byz = jnp.asarray(byz_np)
+
     def get_chunk_fn(mode: str):
         return _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
                                D, use_pallas, interpret, mesh, axis, mode,
-                               cfg.wire_dtype, use_send_kernel)
+                               cfg.wire_dtype, use_send_kernel,
+                               cfg.fault_model, cfg.defense)
 
     # data-plane carry: models + cache + payload lanes of the buffer (the
     # quantized codecs add the (D, N) f16 scale lane — plus a zero-point
@@ -951,9 +1049,12 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             put_dn(carry[8]), put_dn(carry[9]), put_dn(carry[10]),
             put_dn(carry[11]), put_n(carry[12]), carry[13])
         X, y = put_n(X), put_n(y)
+        if byz is not None:
+            byz = put_n(byz)
 
     res = SimResult([], [], [], [], 0, cfg)
     res.buf_payload_bytes = payload_buffer_bytes(D, n, d, cfg.wire_dtype)
+    res.fault_stats = {"corrupted": 0, "gated": 0, "clipped": 0}
     pts = eval_points(cycles, eval_every)
     if not pts:                       # cycles == 0: nothing to simulate
         return res
@@ -1018,6 +1119,11 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             dn, an, online_mat[lo:hi], lo, k_rounds)
         stats["recv_sizes"] = np.array([r.size for r in recv], np.int64)
         stats["multi_sizes"] = np.array([r.size for r in multi], np.int64)
+        # corrupted = Byzantine senders with send_ok (an >= 0 == the
+        # reference engine's send_ok) — pure control-plane info, so the
+        # host counts it while the device scan runs payload math
+        stats["corrupted"] = (int(byz_np[np.nonzero(an >= 0)[1]].sum())
+                              if byz_np is not None else 0)
         T = hi - lo
 
         # sender lists cost T flatnonzero passes over (T, N) — build them
@@ -1071,26 +1177,29 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     for i, p in enumerate(pts):
         lo, hi = bounds[i]
         mode, tables, stats = pending
-        carry, errs = get_chunk_fn(mode)(
+        carry, (errs, fstats) = get_chunk_fn(mode)(
             carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
-            X, y, X_test, y_test, eval_idx)
+            X, y, X_test, y_test, eval_idx, byz)
         if i + 1 < len(pts):
             pending = route(i + 1)    # overlaps the in-flight device scan
         res.sent_total += stats["sent"]
         res.delivered_total += stats["delivered"]
         res.lost_total += stats["lost"]
         res.overflow_total += stats["overflow"]
+        res.fault_stats["corrupted"] += stats["corrupted"]
         res.delivered_per_cycle.extend(
             int(x) for x in stats["delivered_cycles"])
         mode_counts[mode] += 1
         occ_recv.append(stats["recv_sizes"])
         occ_multi.append(stats["multi_sizes"])
         res.cycles.append(p)
-        errs_pending.append(errs)
-    for err_f, err_v, sim in errs_pending:
+        errs_pending.append((errs, fstats))
+    for (err_f, err_v, sim), (g, cl) in errs_pending:
         res.err_fresh.append(float(err_f))
         res.err_voted.append(float(err_v))
         res.similarity.append(float(sim))
+        res.fault_stats["gated"] += int(g)
+        res.fault_stats["clipped"] += int(cl)
     r1 = np.concatenate(occ_recv) / n
     mr = np.concatenate(occ_multi) / n
     res.compaction = dict(

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
+from repro.core import faults as faults_mod
 from repro.core import peer_sampling
 from repro.core.cache import ModelCache
 from repro.core.learners import LinearModel, make_update
@@ -134,7 +135,7 @@ def select_receivers(buf_dst, buf_arrival, online, clock, k_rounds: int):
 
 
 def apply_receives(last_w, last_t, cache: ModelCache, msg_w, msg_t, valid,
-                   X, y, *, variant: str, update):
+                   X, y, *, variant: str, update, defense: str = "none"):
     """Apply up to K sequential receives per node (Algorithm 1 ON RECEIVE).
 
     For each valid (node, round): ``modelCache.add(createModel(m, lastModel));
@@ -142,22 +143,37 @@ def apply_receives(last_w, last_t, cache: ModelCache, msg_w, msg_t, valid,
     parity oracle for the sharded engine's scatter-free ``_vector_apply``
     and the Pallas ``gossip_cycle`` kernel.
 
-    msg_w: (K, N, d); msg_t, valid: (K, N)."""
+    ``defense`` screens each round's payload against the receiver's
+    CURRENT lastModel (``repro.core.faults.apply_defense``) before the
+    merge: a rejected message is treated as never received (no cache add,
+    no lastModel update), a clipped one is merged and stored rescaled.
+    The screen runs inside the round loop because ``lastModel <- m``
+    makes round k's reference model depend on round k-1's verdict.
+
+    msg_w: (K, N, d); msg_t, valid: (K, N). Returns
+    ``(last_w, last_t, cache, gated, clipped)`` with per-node int32
+    counts of rejected/rescaled messages (zeros under ``"none"``)."""
+    gated = jnp.zeros(last_t.shape, jnp.int32)
+    clipped = jnp.zeros(last_t.shape, jnp.int32)
     for k in range(msg_w.shape[0]):
-        has = valid[k]
-        m1 = LinearModel(msg_w[k], msg_t[k])
+        mw, has, g, c = faults_mod.apply_defense(
+            defense, msg_w[k], valid[k], last_w)
+        gated = gated + g.astype(jnp.int32)
+        clipped = clipped + c.astype(jnp.int32)
+        m1 = LinearModel(mw, msg_t[k])
         m2 = LinearModel(last_w, last_t)
         new = create_model(variant, update, m1, m2, X, y)
         cache = cache_mod.cache_add(cache, has, new.w, new.t)
         last_w = jnp.where(has[:, None], m1.w, last_w)
         last_t = jnp.where(has, m1.t, last_t)
-    return last_w, last_t, cache
+    return last_w, last_t, cache, gated, clipped
 
 
-def cycle_core(state: SimState, X, y, online, key, *, variant: str,
-               learner: str, lam: float, eta: float, drop: float,
-               delay_max: int, k_rounds: int, sampler: str,
-               wire_dtype: Optional[str] = None):
+def cycle_core(state: SimState, X, y, online, key, byz=None, *,
+               variant: str, learner: str, lam: float, eta: float,
+               drop: float, delay_max: int, k_rounds: int, sampler: str,
+               wire_dtype: Optional[str] = None,
+               fault_model: Optional[str] = None, defense: str = "none"):
     """One gossip cycle for the whole population (traceable core).
 
     ``wire_dtype`` is the wire-codec *name* (static): quantized codecs
@@ -167,10 +183,21 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     bitwise-reproducible and both engines draw identical noise. The
     ``_ef`` codecs transmit ``fresh + ef`` and update the per-sender
     residual — only on cycles the node actually sends (``send_ok``), which
-    is what keeps the sharded engine's sender-subset compaction exact."""
+    is what keeps the sharded engine's sender-subset compaction exact.
+
+    ``fault_model``/``defense`` (static) + ``byz`` (the (N,) Byzantine
+    mask, ``None`` when faults are off) enable ``repro.core.faults``:
+    model-kind faults rewrite the transmitted model before the encode,
+    the wire-kind "bitflip" rewrites the encoded payload after it (and
+    after the EF-residual update — the honest sender's bookkeeping is
+    computed from what it *encoded*, not what the channel delivered).
+    Fault draws use ``fault_key`` (``fold_in`` from the cycle key), so
+    the pinned 4-way split below — and every fault-free run — is
+    untouched."""
     n, d = state.last_w.shape
     D = delay_max
     codec = get_codec(wire_dtype)
+    fault = faults_mod.get_fault(fault_model)
     update = make_update(learner, lam=lam, eta=eta)
     k_recv, k_dst, k_delay, k_drop = jax.random.split(key, 4)
 
@@ -196,12 +223,20 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     else:
         msg_w = flat_w[src_slot].astype(jnp.float32)  # (K, N, d) winners
     msg_t = flat_t[src_slot]
-    last_w, last_t, cache = apply_receives(
+    last_w, last_t, cache, gated, clipped = apply_receives(
         state.last_w, state.last_t, state.cache, msg_w, msg_t, valid, X, y,
-        variant=variant, update=update)
+        variant=variant, update=update, defense=defense)
 
     # ---- 2) sends ----------------------------------------------------------
     fresh_w, fresh_t = cache_mod.freshest(cache)
+    send_w, send_t = fresh_w, fresh_t
+    if fault is not None and fault.kind == "model":
+        old_w = old_t = None
+        if fault.name == "stale_replay":
+            old_w, old_t = cache_mod.cache_oldest(cache)
+        send_w, send_t = faults_mod.corrupt_model(
+            fault, byz, faults_mod.fault_key(key), fresh_w, fresh_t,
+            old_w, old_t)
     if sampler == "matching":
         dst = peer_sampling.perfect_matching(k_dst, n)
     else:
@@ -218,23 +253,29 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
     # error feedback: transmit fresh + residual; the residual refreshes
     # only where the node actually sends (a non-sender encoded nothing,
     # and its stale buffer slot is provably never routed)
-    x_send = fresh_w + state.ef if codec.ef else fresh_w
+    x_send = send_w + state.ef if codec.ef else send_w
     payload, sc, zp = codec.encode(
         x_send, key=k_recv if codec.stochastic else None)
-    buf_w = state.buf_w.at[slot].set(payload)
-    buf_scale = (state.buf_scale.at[slot].set(sc) if codec.has_scale
-                 else state.buf_scale)
-    buf_zp = state.buf_zp.at[slot].set(zp) if codec.has_zp else state.buf_zp
     ef = state.ef
     if codec.ef:
         ef = jnp.where(send_ok[:, None],
                        x_send - codec.decode(payload, sc, zp, d), ef)
-    buf_t = state.buf_t.at[slot].set(fresh_t)
+    if fault is not None and fault.kind == "wire":
+        payload = faults_mod.bitflip_payload(
+            byz, faults_mod.fault_key(key), payload)
+    buf_w = state.buf_w.at[slot].set(payload)
+    buf_scale = (state.buf_scale.at[slot].set(sc) if codec.has_scale
+                 else state.buf_scale)
+    buf_zp = state.buf_zp.at[slot].set(zp) if codec.has_zp else state.buf_zp
+    buf_t = state.buf_t.at[slot].set(send_t)
     buf_dst = state.buf_dst.at[slot].set(dst)
     buf_arrival = state.buf_arrival.at[slot].set(arrival)
 
+    corrupted = ((byz & send_ok).sum().astype(jnp.int32)
+                 if fault is not None else jnp.zeros((), jnp.int32))
     stats = {"delivered": delivered, "overflow": overflow,
-             "sent": send_ok.sum(), "lost": lost}
+             "sent": send_ok.sum(), "lost": lost, "corrupted": corrupted,
+             "gated": gated.sum(), "clipped": clipped.sum()}
     return SimState(last_w, last_t, cache, buf_w, buf_t, buf_scale, buf_zp,
                     buf_dst, buf_arrival, ef, state.clock + 1), stats
 
@@ -242,22 +283,27 @@ def cycle_core(state: SimState, X, y, online, key, *, variant: str,
 @functools.partial(jax.jit, static_argnames=("variant", "learner", "lam",
                                              "eta", "drop", "delay_max",
                                              "k_rounds", "sampler",
-                                             "wire_dtype"))
-def simulate_cycle(state: SimState, X, y, online, key, *, variant: str,
-                   learner: str, lam: float, eta: float, drop: float,
-                   delay_max: int, k_rounds: int, sampler: str,
-                   wire_dtype: Optional[str] = None):
+                                             "wire_dtype", "fault_model",
+                                             "defense"))
+def simulate_cycle(state: SimState, X, y, online, key, byz=None, *,
+                   variant: str, learner: str, lam: float, eta: float,
+                   drop: float, delay_max: int, k_rounds: int, sampler: str,
+                   wire_dtype: Optional[str] = None,
+                   fault_model: Optional[str] = None, defense: str = "none"):
     """One gossip cycle for the whole population. Returns (state, stats).
 
     ``stats`` message economy (per cycle): every message sent at cycle c is
     eventually exactly one of ``delivered`` (accepted by an online node),
     ``lost`` (destination offline at the arrival cycle), or ``overflow``
     (arrived beyond the K winner rounds) — so over a run,
-    ``sum(sent) == sum(delivered + lost + overflow) + in-flight``."""
-    return cycle_core(state, X, y, online, key, variant=variant,
+    ``sum(sent) == sum(delivered + lost + overflow) + in-flight``.
+    (A defense-gated message still counts ``delivered`` — it reached its
+    destination; ``gated``/``clipped`` account the screen separately.)"""
+    return cycle_core(state, X, y, online, key, byz, variant=variant,
                       learner=learner, lam=lam, eta=eta, drop=drop,
                       delay_max=delay_max, k_rounds=k_rounds, sampler=sampler,
-                      wire_dtype=wire_dtype)
+                      wire_dtype=wire_dtype, fault_model=fault_model,
+                      defense=defense)
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +428,11 @@ class SimResult:
     # (0.0 for codecs without EF state) — bounded (property-tested) because
     # each refresh leaves at most one quantization step behind
     ef_residual_norm: float = 0.0
+    # adversarial-fault telemetry (repro.core.faults): run totals of
+    # messages corrupted at send (Byzantine sender, send_ok cycles),
+    # rejected by the receive-side defense ("gated"), and rescaled by
+    # norm_clip ("clipped") — all zero on fault-free / defense-off runs
+    fault_stats: Dict[str, int] = field(default_factory=dict)
 
 
 def ef_residual_norm(ef) -> float:
@@ -522,21 +573,32 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     state = init_state(n, d, cfg.cache_size, D, wire_dtype=cfg.wire_dtype)
     key = jax.random.key(seed)
 
+    faults_mod.check_defense(cfg.defense)
+    byz = None
+    if cfg.fault_model is not None:
+        faults_mod.get_fault(cfg.fault_model)    # fail fast on unknown names
+        byz = jnp.asarray(
+            faults_mod.byzantine_mask(seed, n, cfg.byzantine_frac))
+
     res = SimResult([], [], [], [], 0, cfg)
     res.buf_payload_bytes = payload_buffer_bytes(D, n, d, cfg.wire_dtype)
+    res.fault_stats = {"corrupted": 0, "gated": 0, "clipped": 0}
     for c in range(cycles):
         key, sub = jax.random.split(key)
         state, stats = simulate_cycle(
-            state, X, y, jnp.asarray(online_mat[c]), sub,
+            state, X, y, jnp.asarray(online_mat[c]), sub, byz,
             variant=cfg.variant, learner=cfg.learner, lam=cfg.lam,
             eta=cfg.eta, drop=cfg.drop_prob,
             delay_max=D, k_rounds=k_rounds,
-            sampler=sampler, wire_dtype=cfg.wire_dtype)
+            sampler=sampler, wire_dtype=cfg.wire_dtype,
+            fault_model=cfg.fault_model, defense=cfg.defense)
         res.overflow_total += int(stats["overflow"])
         res.sent_total += int(stats["sent"])
         res.delivered_total += int(stats["delivered"])
         res.delivered_per_cycle.append(int(stats["delivered"]))
         res.lost_total += int(stats["lost"])
+        for k in ("corrupted", "gated", "clipped"):
+            res.fault_stats[k] += int(stats[k])
         if (c + 1) % eval_every == 0 or c == cycles - 1:
             err_f, err_v, sim = _eval(state.cache, eval_idx, X_test, y_test)
             res.cycles.append(c + 1)

@@ -52,6 +52,7 @@ from jax.experimental import pallas as pl
 # engines' parity contract requires bitwise-identical stochastic-rounding
 # noise everywhere. Threefry is 20 rounds of uint32 add/rotate/xor on the
 # VPU — cheap relative to the (N, d) HBM traffic this kernel saves.
+from repro.core.faults import apply_defense
 from repro.core.wire_codec import (get_codec, symmetric_scale,
                                    unpack_int4, unpack_ternary)
 from repro.core.wire_codec import uniform_at as _uniform_at
@@ -94,13 +95,22 @@ def _decode_msg(raw, msc, mzp, dp: int, wire_mode: str):
 def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
                   y_ref, last_w_ref, last_t_ref, cw_ref, ct_ref, ptr_ref,
                   cnt_ref, out_lw, out_lt, out_cw, out_ct, out_ptr, out_cnt,
-                  *, variant: str, lam: float, c_real: int, k_rounds: int,
-                  wire_mode: str = "float"):
+                  out_gated, out_clipped, *, variant: str, lam: float,
+                  c_real: int, k_rounds: int, wire_mode: str = "float",
+                  defense: str = "none", d_real: int = 0):
     """``msc_ref``/``mzp_ref`` are the per-message f16 scale/zero-point of
     the quantized wire codecs (None lanes when the codec does not carry
     them): messages stream into VMEM at wire precision and are decoded by
     :func:`_decode_msg` — same expressions (and op order) as the
-    ``repro.core.wire_codec`` decoders, so kernel and jnp paths agree."""
+    ``repro.core.wire_codec`` decoders, so kernel and jnp paths agree.
+
+    ``defense`` runs ``faults.apply_defense`` between the decode and the
+    merge of every round (the jnp round-chain placement); its reductions
+    mask the padded lanes (``d_real``) to zero, which keeps them bitwise
+    equal to the unpadded jnp sums (the ``_pegasos`` margin precedent) —
+    required because packed payload pad bytes decode to finite garbage.
+    ``out_gated``/``out_clipped`` accumulate the per-node screen counts
+    (zeros under ``"none"``)."""
     lw = last_w_ref[...].astype(jnp.float32)       # (BLK, d)
     lt = last_t_ref[...]                           # (BLK,)
     cw = cw_ref[...].astype(jnp.float32)           # (BLK, C_pad, d)
@@ -111,6 +121,10 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
     y = y_ref[...].astype(jnp.float32)
     blk, c_pad = ct.shape
     dp = lw.shape[1]
+    real = (lax.broadcasted_iota(jnp.int32, (blk, dp), 1) < d_real
+            if defense != "none" else None)
+    gated = jnp.zeros((blk,), jnp.int32)
+    clipped = jnp.zeros((blk,), jnp.int32)
 
     for kk in range(k_rounds):
         vm = valid_ref[kk, :] > 0                  # (BLK,) receives this round
@@ -118,6 +132,9 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
                          msc_ref[kk, :] if msc_ref is not None else None,
                          mzp_ref[kk, :] if mzp_ref is not None else None,
                          dp, wire_mode)
+        mw, vm, g, cl = apply_defense(defense, mw, vm, lw, real=real)
+        gated = gated + g.astype(jnp.int32)
+        clipped = clipped + cl.astype(jnp.int32)
         mt = msg_t_ref[kk, :]
         if variant == "mu":                        # update(merge(m, last))
             nw, nt = _pegasos((mw + lw) / 2.0, jnp.maximum(mt, lt), x, y, lam)
@@ -145,6 +162,8 @@ def _cycle_kernel(msg_w_ref, msg_t_ref, msc_ref, mzp_ref, valid_ref, x_ref,
     out_ct[...] = ct
     out_ptr[...] = ptr
     out_cnt[...] = cnt
+    out_gated[...] = gated
+    out_clipped[...] = clipped
 
 
 def _kernel_no_meta(msg_w_ref, msg_t_ref, valid_ref, *rest, **kw):
@@ -181,16 +200,18 @@ def _wire_mode(wire, msg_scale, msg_zp) -> str:
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "lam", "interpret",
-                                             "wire"))
+                                             "wire", "defense"))
 def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
                         msg_w, msg_t, valid, x, y, *, msg_scale=None,
                         msg_zp=None, wire=None, variant: str, lam: float,
-                        interpret: bool = False):
+                        interpret: bool = False, defense: str = "none"):
     """Fused K-receive apply for one cycle.
 
     last_w, x: (N, d); cache_w: (N, C, d); msg_w: (K, N, P);
     msg_t, valid: (K, N) int32; returns the updated
-    (last_w, last_t, cache_w, cache_t, ptr, count).
+    (last_w, last_t, cache_w, cache_t, ptr, count, gated, clipped) —
+    the trailing (N,) int32 pair counts the messages the static
+    ``defense`` screen rejected/rescaled in-kernel (zeros for "none").
 
     ``msg_w`` may arrive in any wire codec's payload representation (the
     simulator's in-flight buffer under ``cfg.wire_dtype``, named by the
@@ -234,7 +255,7 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
     csca = pl.BlockSpec((blk, cp), lambda i: (i, 0))
 
     kw = dict(variant=variant, lam=lam, c_real=c, k_rounds=k,
-              wire_mode=mode)
+              wire_mode=mode, defense=defense, d_real=d)
     if mode == "affine8":
         kernel = functools.partial(_cycle_kernel, **kw)
         meta_args = (_pad_to(msg_scale, blk, 1), _pad_to(msg_zp, blk, 1))
@@ -253,7 +274,7 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
         grid=grid,
         in_specs=[kvec, ksca, *meta_specs, ksca, vec, sca, vec, sca, cvec,
                   csca, sca, sca],
-        out_specs=[vec, sca, cvec, csca, sca, sca],
+        out_specs=[vec, sca, cvec, csca, sca, sca, sca, sca],
         out_shape=[
             jax.ShapeDtypeStruct((np_, dp), last_w.dtype),
             jax.ShapeDtypeStruct((np_,), jnp.int32),
@@ -261,12 +282,14 @@ def fused_receive_apply(last_w, last_t, cache_w, cache_t, ptr, count,
             jax.ShapeDtypeStruct((np_, cp), jnp.int32),
             jax.ShapeDtypeStruct((np_,), jnp.int32),
             jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
         ],
         interpret=interpret,
     )(mw, mt, *meta_args, vl, xp, yp, lw, lt, cwp, ctp, ptrp, cntp)
-    lw_n, lt_n, cw_n, ct_n, ptr_n, cnt_n = outs
+    lw_n, lt_n, cw_n, ct_n, ptr_n, cnt_n, gated_n, clipped_n = outs
     return (lw_n[:n, :d], lt_n[:n], cw_n[:n, :c, :d], ct_n[:n, :c],
-            ptr_n[:n], cnt_n[:n])
+            ptr_n[:n], cnt_n[:n], gated_n[:n], clipped_n[:n])
 
 
 # ---------------------------------------------------------------------------

@@ -71,14 +71,14 @@ def test_gossip_cycle_kernel_sweep(variant, n, c, d, k):
     y = jnp.sign(jax.random.normal(ks[1], (n,)) + 0.1)
 
     upd = make_update("pegasos", lam=lam)
-    exp_lw, exp_lt, exp_cache = apply_receives(
+    exp_lw, exp_lt, exp_cache, _, _ = apply_receives(
         last_w, last_t, cache, msg_w, msg_t, valid, x, y,
         variant=variant, update=upd)
     got = gc.fused_receive_apply(
         last_w, last_t, cache.w, cache.t, cache.ptr, cache.count,
         msg_w, msg_t, valid.astype(jnp.int32), x, y,
         variant=variant, lam=lam, interpret=True)
-    got_lw, got_lt, got_cw, got_ct, got_ptr, got_cnt = got
+    got_lw, got_lt, got_cw, got_ct, got_ptr, got_cnt, _, _ = got
     np.testing.assert_allclose(np.asarray(got_lw), np.asarray(exp_lw),
                                rtol=2e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(got_lt), np.asarray(exp_lt))

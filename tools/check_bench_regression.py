@@ -14,8 +14,9 @@ Usage (what ``tools/run_tests.sh --bench-smoke`` does):
 
 ``--pair BASELINE CURRENT`` may repeat; the legacy single
 ``--baseline``/``--current`` spelling still works. Rows are matched on
-(engine, scenario, n_nodes, wire_dtype) — the wire-quantization rows carry
-no engine/scenario and match on (N, codec) alone. Cycle counts may differ
+(engine, scenario, n_nodes, wire_dtype, fault_model, byzantine_frac,
+defense) — the wire-quantization rows carry no engine/scenario/fault
+columns and match on (N, codec) alone. Cycle counts may differ
 between --quick and full runs, but node-cycles/sec is a rate, so the
 comparison stays meaningful. A current rate below ``tolerance`` × the
 baseline rate fails loudly (exit 1) listing every regressed row; rows only
@@ -50,8 +51,13 @@ MIN_NODE_CYCLES = 1_000_000
 
 
 def row_key(row: dict):
+    # fault_model is null for fault-free rows — normalize so mixed keys
+    # stay sortable
     return (row.get("engine"), row.get("scenario", "extreme"),
-            row.get("n_nodes"), row.get("wire_dtype", "f32"))
+            row.get("n_nodes"), row.get("wire_dtype") or "f32",
+            row.get("fault_model") or "none",
+            row.get("byzantine_frac") or 0.0,
+            row.get("defense") or "none")
 
 
 def node_cycles(row: dict) -> int:

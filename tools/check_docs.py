@@ -20,9 +20,12 @@ It also cross-checks the **wire-codec registry** against the docs: the
 codec table in docs/ENGINES.md (fenced by ``wire-codec-table`` markers)
 must name every codec registered in ``repro.core.wire_codec.WIRE_CODECS``,
 and must not name a codec that is not registered — so the codec docs
-cannot go stale in either direction. The **repro-lint rule table** in
-docs/CONTRACTS.md (fenced by ``lint-rule-table`` markers) is held to the
-same standard against ``tools/lint/rules.RULES``.
+cannot go stale in either direction. The **fault-model and defense
+tables** in docs/ENGINES.md (``fault-model-table`` / ``defense-table``
+markers) are held to the same standard against
+``repro.core.faults.FAULT_MODELS`` / ``DEFENSES``, as is the
+**repro-lint rule table** in docs/CONTRACTS.md (``lint-rule-table``
+markers) against ``tools/lint/rules.RULES``.
 
 Run directly or via tools/run_tests.sh; exits non-zero listing every stale
 reference.
@@ -151,6 +154,69 @@ def check_codec_registry(errors: list) -> None:
                       "is not a registered wire codec")
 
 
+FAULT_TABLE = re.compile(
+    r"<!--\s*fault-model-table:begin\s*-->(.*?)"
+    r"<!--\s*fault-model-table:end\s*-->", re.S)
+DEFENSE_TABLE = re.compile(
+    r"<!--\s*defense-table:begin\s*-->(.*?)"
+    r"<!--\s*defense-table:end\s*-->", re.S)
+
+
+def registered_faults():
+    """The fault-model registry + defense tuple, imported from the source
+    tree: the sets the docs must mirror."""
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.core.faults import DEFENSES, FAULT_MODELS
+        return set(FAULT_MODELS), set(DEFENSES)
+    finally:
+        sys.path.pop(0)
+
+
+def _table_names(table_text: str, pattern: str = r"`([A-Za-z0-9_]+)`"):
+    """First backticked token of each table row = the name column."""
+    names = set()
+    for line in table_text.splitlines():
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        names.update(re.findall(pattern, line.split("|")[1]))
+    return names
+
+
+def check_fault_registry(errors: list) -> None:
+    """Fault/defense registries <-> docs consistency, both directions."""
+    doc = REPO / "docs" / "ENGINES.md"
+    text = doc.read_text() if doc.is_file() else ""
+    faults, defenses = registered_faults()
+    m = FAULT_TABLE.search(text)
+    if not m:
+        errors.append("docs/ENGINES.md: missing the "
+                      "<!-- fault-model-table:begin/end --> markers around "
+                      "the fault-model table")
+    else:
+        doc_names = _table_names(m.group(1))
+        for name in sorted(faults - doc_names):
+            errors.append(f"docs/ENGINES.md: registered fault model "
+                          f"{name!r} missing from the fault-model table")
+        for name in sorted(doc_names - faults):
+            errors.append(f"docs/ENGINES.md: fault-model table names "
+                          f"{name!r}, which is not a registered fault model")
+    m = DEFENSE_TABLE.search(text)
+    if not m:
+        errors.append("docs/ENGINES.md: missing the "
+                      "<!-- defense-table:begin/end --> markers around "
+                      "the defense table")
+    else:
+        doc_names = _table_names(m.group(1))
+        for name in sorted(defenses - doc_names):
+            errors.append(f"docs/ENGINES.md: registered defense {name!r} "
+                          "missing from the defense table")
+        for name in sorted(doc_names - defenses):
+            errors.append(f"docs/ENGINES.md: defense table names {name!r}, "
+                          "which is not a registered defense")
+
+
 LINT_TABLE = re.compile(
     r"<!--\s*lint-rule-table:begin\s*-->(.*?)"
     r"<!--\s*lint-rule-table:end\s*-->", re.S)
@@ -197,6 +263,7 @@ def main() -> int:
     corpus = source_corpus()
     errors = []
     check_codec_registry(errors)
+    check_fault_registry(errors)
     check_lint_rules(errors)
     for doc in DOC_FILES:
         if not doc.is_file():

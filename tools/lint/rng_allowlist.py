@@ -43,6 +43,15 @@ RNG_ALLOWED: Dict[Tuple[str, str], FrozenSet[str]] = {
     # int8_sr wire noise from k_recv (the slot the float codecs leave
     # unused), uniform over the full (N, d) block
     ("core/wire_codec.py", "quantize_wire"): frozenset({"uniform"}),
+    # adversarial fault stream: k_fault = fold_in(cycle key, FAULT_FOLD)
+    # DERIVES a side key without consuming from the pinned 4-way split, so
+    # fault-free runs keep the exact pre-fault threefry counters
+    ("core/faults.py", "fault_key"): frozenset({"fold_in"}),
+    # random_payload resample from k_fault; the subset path goes through
+    # sr_noise_for_rows so sender-subset draws match the dense gather
+    ("core/faults.py", "corrupt_model"): frozenset({"uniform"}),
+    # one uniform per message from k_fault picks the wire bit to flip
+    ("core/faults.py", "bitflip_payload"): frozenset({"uniform"}),
     # centralized baselines (Section V): their own key chains, not part of
     # the gossip draw sequence but pinned for reproducibility all the same
     ("core/ensemble.py", "run_weighted_bagging"):
