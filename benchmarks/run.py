@@ -10,7 +10,7 @@ import time
 
 SUITES = ["table1", "fig1", "fig2", "fig3", "theory", "kernels",
           "gossip_vs_allreduce", "roofline", "population_scaling",
-          "wire_quantization", "robustness"]
+          "wire_quantization", "robustness", "serving"]
 
 
 def main() -> None:
@@ -56,6 +56,9 @@ def main() -> None:
     if "robustness" in only:
         from benchmarks import robustness
         robustness.run(args.quick)
+    if "serving" in only:
+        from benchmarks import serving
+        serving.run(args.quick)
     print(f"benchmarks done in {time.time()-t0:.1f}s")
 
 

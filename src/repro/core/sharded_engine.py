@@ -915,7 +915,8 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                            interpret: Optional[bool] = None,
                            compact_rounds: Optional[bool] = None,
                            compact_mode: Optional[str] = None,
-                           use_send_kernel: Optional[bool] = None
+                           use_send_kernel: Optional[bool] = None,
+                           serve_hook=None
                            ) -> SimResult:
     """Run the protocol with the sharded mega-population engine.
 
@@ -957,7 +958,15 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     ``compact_all`` packing go one step further regardless of the flag:
     they encode only the sender subset (``sr_noise_for_rows`` keeps the
     noise positionally identical), which strictly dominates a
-    full-population kernel pass."""
+    full-population kernel pass.
+
+    ``serve_hook``: optional ``hook(cycle, snapshot)`` — the live serving
+    surface. Called at every eval point (chunk boundary) with a
+    ``repro.core.serving.QuerySnapshot`` built from the scan carry, a pure
+    read of the live cache lanes: bitwise identical to the reference
+    engine's snapshot at the same cycle, and provably non-perturbing (the
+    scan never observes the hook). The hook must consume the snapshot
+    before the next chunk runs — the chunk fn donates its carry."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
     codec = get_codec(cfg.wire_dtype)
@@ -1180,6 +1189,12 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         carry, (errs, fstats) = get_chunk_fn(mode)(
             carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
             X, y, X_test, y_test, eval_idx, byz)
+        if serve_hook is not None:
+            # pure read of the fresh carry, dispatched before the next
+            # chunk donates it; the scan never observes the hook, so the
+            # run is bitwise identical with or without serving
+            from repro.core import serving
+            serve_hook(p, serving.snapshot_from_carry(carry))
         if i + 1 < len(pts):
             pending = route(i + 1)    # overlaps the in-flight device scan
         res.sent_total += stats["sent"]

@@ -517,7 +517,7 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                    cycles: int = 200, eval_every: int = 10, seed: int = 0,
                    eval_nodes: int = 100, sampler: str = "uniform",
                    k_rounds: int = 4, engine: str = "reference",
-                   **engine_kwargs) -> SimResult:
+                   serve_hook=None, **engine_kwargs) -> SimResult:
     """Run the full protocol for ``cycles`` gossip cycles.
 
     The one entry point for both execution engines. Inputs: ``cfg`` fixes
@@ -550,13 +550,20 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
       given seed it reproduces the reference error curves. Extra keyword
       arguments (``mesh=``, ``use_pallas=``, ``interpret=``) are forwarded
       to :func:`repro.core.sharded_engine.run_sharded_simulation`.
+
+    ``serve_hook``: optional ``hook(cycle, snapshot)`` — the live serving
+    surface (:mod:`repro.core.serving`). At every eval point both engines
+    call it with a :class:`repro.core.serving.QuerySnapshot` of the live
+    state (cache ring buffer + freshest models), a pure read that cannot
+    perturb the run: with or without a hook, the curves are bitwise
+    identical (tests/test_serving.py).
     """
     if engine == "sharded":
         from repro.core.sharded_engine import run_sharded_simulation
         return run_sharded_simulation(
             cfg, X, y, X_test, y_test, cycles=cycles, eval_every=eval_every,
             seed=seed, eval_nodes=eval_nodes, sampler=sampler,
-            k_rounds=k_rounds, **engine_kwargs)
+            k_rounds=k_rounds, serve_hook=serve_hook, **engine_kwargs)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'reference' or 'sharded')")
@@ -605,6 +612,9 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             res.err_fresh.append(float(err_f))
             res.err_voted.append(float(err_v))
             res.similarity.append(float(sim))
+            if serve_hook is not None:
+                from repro.core import serving
+                serve_hook(c + 1, serving.take_snapshot(state))
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     res.ef_residual_norm = ef_residual_norm(state.ef)
     return res

@@ -5,7 +5,7 @@ compiled by Mosaic on TPU backends. Use ``repro.kernels.ops`` for the
 public jit'd entry points.
 """
 from repro.kernels import (flash_attention, gossip_cycle, gossip_merge, ops,
-                           pegasos_update, ref)
+                           pegasos_update, ref, voted_predict)
 
 __all__ = ["ops", "ref", "pegasos_update", "gossip_merge", "gossip_cycle",
-           "flash_attention"]
+           "flash_attention", "voted_predict"]

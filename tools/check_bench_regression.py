@@ -6,11 +6,13 @@ Usage (what ``tools/run_tests.sh --bench-smoke`` does):
 
     cp BENCH_population_scaling.json /tmp/pop.json     # before the bench
     cp BENCH_wire_quantization.json /tmp/wire.json
+    cp BENCH_serving.json /tmp/serving.json
     python -m benchmarks.run --quick \
-        --only population_scaling,wire_quantization
+        --only population_scaling,wire_quantization,serving
     python tools/check_bench_regression.py \
         --pair /tmp/pop.json BENCH_population_scaling.json \
-        --pair /tmp/wire.json BENCH_wire_quantization.json [--tolerance 0.4]
+        --pair /tmp/wire.json BENCH_wire_quantization.json \
+        --pair /tmp/serving.json BENCH_serving.json [--tolerance 0.4]
 
 ``--pair BASELINE CURRENT`` may repeat; the legacy single
 ``--baseline``/``--current`` spelling still works. Rows are matched on
@@ -32,7 +34,9 @@ full baseline — a rate mismatch there says nothing about the engine.
 
 Also guards every file's ``parity_bitwise`` probe: any wire codec whose
 cross-engine curves stopped being bitwise-identical fails regardless of
-speed — for the wire bench that covers the full codec registry. Rows
+speed — for the wire bench that covers the full codec registry, and for
+the serving bench the snapshot engine-parity / Pallas-kernel-vs-jnp /
+serving-never-perturbs probes. Rows
 carrying a ``retraces`` field (compiles triggered per bench row) are
 diffed informationally — the hard compile-count gate is
 ``tools/lint/retrace_guard.py``.

@@ -63,6 +63,14 @@ BUDGETS: Dict[str, int] = {
     # power-of-two buckets, so a short run sees at most 2 width buckets
     # before sticking
     "sharded_engine.chunk_fn[mu/pegasos/compact_all/int8]": 2,
+    # serving tier: one signature per (N, batch, d) — the suite serves one
+    # fixed-shape batch from both engines' snapshots (identical shapes, so
+    # each path compiles once); the Pallas voted_predict_batched cache is
+    # counted separately from its serve_voted_kernel wrapper
+    "serving.serve_fresh": 1,
+    "serving.serve_voted": 1,
+    "serving.serve_voted_kernel": 1,
+    "kernels.voted_predict_batched": 1,
 }
 
 
@@ -109,11 +117,18 @@ def diff_counts(cold: Dict[str, int], warm: Dict[str, int]) -> List[str]:
 
 def snapshot() -> Dict[str, int]:
     """Current compile-cache sizes of every budgeted hot-path fn."""
-    from repro.core import sharded_engine, simulation
+    from repro.core import serving, sharded_engine, simulation
+    from repro.kernels import voted_predict
     counts = dict(sharded_engine.retrace_counts())
     counts["simulation.simulate_cycle"] = \
         simulation.simulate_cycle._cache_size()
     counts["simulation._eval"] = simulation._eval._cache_size()
+    counts["serving.serve_fresh"] = serving.serve_fresh._cache_size()
+    counts["serving.serve_voted"] = serving.serve_voted._cache_size()
+    counts["serving.serve_voted_kernel"] = \
+        serving.serve_voted_kernel._cache_size()
+    counts["kernels.voted_predict_batched"] = \
+        voted_predict.voted_predict_batched._cache_size()
     return counts
 
 
@@ -138,9 +153,22 @@ def _mini_suite():
                            variant="mu", cache_size=4),
         "sparse-d0.5-o0.3")
     kw = dict(cycles=20, eval_every=10, seed=0, k_rounds=2)
-    run_simulation(cfg, X, y, Xt, yt, **kw)
+    # serving tier rides on the reference + dense-sharded runs: both
+    # engines' snapshots have identical shapes, and the query batch is
+    # fixed-shape, so each serve path must compile exactly once
+    from repro.launch.gossip_serve import GossipServer
+    srv = GossipServer(batch_size=16, use_kernel=False)
+    srv_k = GossipServer(batch_size=16, use_kernel=True)
+    Xq = Xt[:16]
+
+    def serve_hook(cycle, snap):
+        for s in (srv, srv_k):
+            s.serve_hook(cycle, snap)
+            s.submit(Xq)
+
+    run_simulation(cfg, X, y, Xt, yt, serve_hook=serve_hook, **kw)
     run_simulation(cfg, X, y, Xt, yt, engine="sharded",
-                   compact_rounds=False, **kw)
+                   compact_rounds=False, serve_hook=serve_hook, **kw)
     cfg_q = dataclasses.replace(cfg, wire_dtype="int8")
     run_simulation(cfg_q, X, y, Xt, yt, engine="sharded",
                    compact_mode="compact_all", **kw)

@@ -58,4 +58,11 @@ RNG_ALLOWED: Dict[Tuple[str, str], FrozenSet[str]] = {
         frozenset({"split", "randint"}),
     ("core/ensemble.py", "run_sequential_pegasos"):
         frozenset({"split", "randint"}),
+    # core/serving.py has NO entry on purpose: the serving tier draws its
+    # query-assignment randomness from a host-side numpy stream
+    # (serving.assign_queries), never from jax.random — a serving draw in
+    # the threefry chain would shift the pinned per-cycle counters and
+    # break cross-engine parity exactly the way this allowlist exists to
+    # prevent. Keep it that way: a jax.random call appearing in
+    # core/serving.py should fail this rule, not get registered here.
 }
