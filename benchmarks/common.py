@@ -1,10 +1,18 @@
-"""Shared benchmark utilities: CSV/JSON output + dataset cache."""
+"""Shared benchmark utilities: CSV/JSON output + dataset cache.
+
+Wall-clock timing lives in ``repro.core.telemetry`` (one home for every
+timer/histogram in the repo); ``Timer``, ``best_of`` and
+``LatencyHistogram`` are re-exported here so benches keep one import."""
 from __future__ import annotations
 
 import functools
 import json
-import time
 from pathlib import Path
+
+from repro.core.telemetry import LatencyHistogram, Timer, best_of
+
+__all__ = ["REPO_ROOT", "OUT_DIR", "write_csv", "write_bench_json",
+           "dataset", "Timer", "best_of", "LatencyHistogram"]
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_DIR = REPO_ROOT / "results" / "benchmarks"
@@ -33,12 +41,3 @@ def write_bench_json(name: str, payload: dict) -> Path:
 def dataset(name: str, seed: int = 0):
     from repro.data.synthetic import paper_dataset
     return paper_dataset(name, seed)
-
-
-class Timer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
-
-    def __exit__(self, *a):
-        self.s = time.time() - self.t0

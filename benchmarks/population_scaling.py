@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, write_bench_json, write_csv
+from benchmarks.common import Timer, best_of, write_bench_json, write_csv
 
 REF_MAX_N = 100_000            # reference engine measured up to here
 SPEEDUP_AT_N = 100_000         # the acceptance-criterion comparison point
@@ -130,22 +130,18 @@ def run(quick: bool = False) -> dict:
     def measure(label, scenario, n, wire, kw, X, y, Xt, yt):
         cfg = _cfg(n, d, scenario, wire_dtype=wire)
         # warm-up run compiles (same chunk length as the timed run); the
-        # timed runs measure steady state and the BEST of two is reported —
-        # a min-time estimator, since the shared 2-core container's noise
-        # is strictly additive. eval_every=10 gives paper-style curves and
+        # timed runs measure steady state via the shared min-time estimator
+        # (telemetry.best_of) — the shared 2-core container's noise is
+        # strictly additive. eval_every=10 gives paper-style curves and
         # lets the sharded engine pipeline host routing against the
         # in-flight device scan.
         traces0 = _retrace_total()
         run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
                        eval_every=10, seed=0, k_rounds=k_rounds, **kw)
-        secs = []
-        for _ in range(2):
-            with Timer() as t:
-                res = run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
-                                     eval_every=10, seed=0,
-                                     k_rounds=k_rounds, **kw)
-            secs.append(t.s)
-        best = min(secs)
+        best, secs, res = best_of(
+            lambda: run_simulation(cfg, X, y, Xt, yt, cycles=cycles,
+                                   eval_every=10, seed=0,
+                                   k_rounds=k_rounds, **kw))
         rate = n * cycles / best
         rates[(label, scenario, n)] = rate
         results[(label, scenario, n)] = res

@@ -6,9 +6,12 @@ query stream — drawn from the held-out test set, so every served answer has
 a label — is batched and answered from eval-point snapshots with the cache
 majority vote. Per (scenario, N) the rows record co-serving protocol
 throughput (node-cycles/s over the full wall clock, serving included),
-queries/s, p50/p99 batch latency and the fresh-vs-voted accuracy of the
-*served* answers, at N = 10^4..10^6 (quick: 10^4) under the clean and the
-paper's extreme (50% drop, 10Δ delays, 90% online) scenarios.
+queries/s, histogram-backed p50/p90/p99/p999 batch latency (the shared
+fixed-bucket ``repro.core.telemetry.LatencyHistogram`` — rows also carry
+the sparse bucket dump, comparable across PRs) and the fresh-vs-voted
+accuracy of the *served* answers, at N = 10^4..10^6 (quick: 10^4) under
+the clean and the paper's extreme (50% drop, 10Δ delays, 90% online)
+scenarios.
 
 Bitwise probes ride along at a fixed PROBE_N (the robustness-bench
 precedent — the reference engine cannot reach 10^6): per scenario × wire
@@ -183,6 +186,9 @@ def run(quick: bool = False) -> dict:
                 queries=s.queries, queries_per_sec=s.queries_per_sec,
                 p50_latency_s=s.p50_latency_s,
                 p99_latency_s=s.p99_latency_s,
+                p90_latency_s=s.p90_latency_s,
+                p999_latency_s=s.p999_latency_s,
+                latency_hist=s.latency_hist,
                 acc_voted=acc_voted, acc_fresh=acc_fresh,
                 snapshot_parity=snap_ok))
             print("serving," + ",".join(str(x) for x in rows[-1]))

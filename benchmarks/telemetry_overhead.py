@@ -1,0 +1,173 @@
+"""Telemetry-overhead bench: armed vs unarmed runs at mega-population N.
+
+The telemetry contract (docs/CONTRACTS.md) has two halves: an armed
+:class:`repro.core.telemetry.Telemetry` must be *bitwise invisible* to the
+protocol, and it must stay *cheap* — the acceptance criterion is <= 5%
+node-cycles/s overhead on the sharded engine at N = 10^6. This bench
+measures both:
+
+* **Overhead rows** — best-of-2 sharded runs on the paper's extreme
+  scenario (50% drop, 10Δ delays, 90% online), unarmed
+  (``engine="sharded"``) vs armed with a fresh Telemetry per run
+  (``engine="sharded-telemetry"``, which adds the per-cycle stream
+  reductions, host spans, and the "/telem" chunk-fn variant). A matching
+  reference-engine pair rides along at REF_N. The headline derived number
+  is ``telemetry_overhead_ratio`` (armed seconds / unarmed seconds at the
+  top N) — tools/check_bench_regression.py fails if a fresh run's ratio
+  exceeds 1.10x the committed one; the <= 5% absolute acceptance
+  criterion is recorded in the committed full-run baseline as
+  ``derived.overhead_within_ceiling`` (vs ``RATIO_CEILING``).
+* **Invisibility probes** (``parity_bitwise``) — at PROBE_N, armed vs
+  unarmed error curves and message totals are bitwise identical on BOTH
+  engines, and the armed reference and sharded runs emit bitwise-equal
+  metric streams (the cross-engine parity surface of
+  tests/test_telemetry.py, re-checked here as a no-baseline hard gate).
+
+    PYTHONPATH=src python -m benchmarks.telemetry_overhead [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only telemetry_overhead
+
+Output: CSV rows (results/benchmarks/) plus the machine-readable
+``BENCH_telemetry_overhead.json`` at the repo root (guarded as the fifth
+pair of tools/run_tests.sh --bench-smoke).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import best_of, write_bench_json, write_csv
+
+DIM = 10                       # matches the population_scaling sweep
+K_ROUNDS = 8
+REF_N = 10_000                 # reference-engine overhead pair runs here
+PROBE_N = 2_000                # bitwise invisibility probes run at this N
+RATIO_CEILING = 1.05           # the <= 5% acceptance criterion
+
+
+def _dataset(n: int, seed: int = 0):
+    from repro.data.synthetic import make_linear_dataset
+    rng = np.random.default_rng(seed)
+    X, y = make_linear_dataset(rng, n + 512, DIM, noise=0.07,
+                               separation=2.5)
+    return X[:n], y[:n], X[n:], y[n:]
+
+
+def _cfg(n: int, scenario: str = "extreme", wire=None):
+    from repro.configs.gossip_linear import (GossipLinearConfig,
+                                             with_failure_scenario)
+    return with_failure_scenario(
+        GossipLinearConfig(name=f"telov-{n}", dim=DIM, n_nodes=n,
+                           n_test=512, class_ratio=(1, 1), lam=1e-3,
+                           variant="mu", cache_size=4, wire_dtype=wire),
+        scenario)
+
+
+def _invisibility_probes(cycles: int) -> dict:
+    """Armed == unarmed bitwise, both engines; ref == sharded streams."""
+    from repro.core.simulation import run_simulation
+    from repro.core.telemetry import METRIC_STREAMS, Telemetry
+
+    X, y, Xt, yt = _dataset(PROBE_N, seed=1)
+    cfg = _cfg(PROBE_N)
+    kw = dict(cycles=cycles, eval_every=10, seed=0, k_rounds=2)
+
+    parity = {}
+    tels = {}
+    for engine in ("reference", "sharded"):
+        plain = run_simulation(cfg, X, y, Xt, yt, engine=engine, **kw)
+        tel = Telemetry(label=f"probe-{engine}")
+        armed = run_simulation(cfg, X, y, Xt, yt, engine=engine,
+                               telemetry=tel, **kw)
+        tels[engine] = tel
+        parity[f"invisible/{engine}"] = bool(
+            plain.err_fresh == armed.err_fresh
+            and plain.err_voted == armed.err_voted
+            and plain.sent_total == armed.sent_total
+            and plain.delivered_total == armed.delivered_total)
+    parity["streams_equal"] = all(
+        np.array_equal(tels["reference"].stream_array(name),
+                       tels["sharded"].stream_array(name))
+        for name in METRIC_STREAMS)
+    print("telemetry_overhead,probes," + ",".join(
+        f"{k}={'bitwise' if v else 'MISMATCH'}"
+        for k, v in sorted(parity.items())))
+    return parity
+
+
+def run(quick: bool = False) -> dict:
+    from repro.core.simulation import run_simulation
+    from repro.core.telemetry import Telemetry
+
+    cycles = 20 if quick else 50
+    top_n = 100_000 if quick else 1_000_000
+
+    parity = _invisibility_probes(20)
+
+    rows, json_rows = [], []
+    best_secs: dict = {}
+    for engine, n in [("reference", REF_N), ("sharded", top_n)]:
+        X, y, Xt, yt = _dataset(n)
+        cfg = _cfg(n)
+        kw = dict(cycles=cycles, eval_every=10, seed=0, k_rounds=K_ROUNDS,
+                  engine=engine)
+        for armed in (False, True):
+            label = engine + ("-telemetry" if armed else "")
+
+            def one_run():
+                tel = Telemetry(label=label) if armed else None
+                res = run_simulation(cfg, X, y, Xt, yt, telemetry=tel,
+                                     **kw)
+                return res, tel
+
+            one_run()                         # warm-up (compiles)
+            best, secs, (res, tel) = best_of(one_run)
+            rate = n * cycles / best
+            best_secs[label] = best
+            row = dict(engine=label, scenario="extreme", n_nodes=n,
+                       cycles=cycles, seconds=best, seconds_all=secs,
+                       node_cycles_per_sec=rate,
+                       err_fresh=res.err_fresh[-1], wire_dtype="f32")
+            if tel is not None:
+                row["spans"] = len(tel.spans)
+                row["stream_cycles"] = len(tel.streams["sent"])
+                row["phase_seconds"] = {
+                    k: round(v, 6)
+                    for k, v in sorted(tel.phase_seconds().items())}
+            json_rows.append(row)
+            rows.append((label, "extreme", n, cycles, f"{best:.3f}",
+                         f"{rate:.0f}", f"{res.err_fresh[-1]:.4f}"))
+            print("telemetry_overhead," + ",".join(
+                str(x) for x in rows[-1]))
+
+    derived = {}
+    for engine, n in [("reference", REF_N), ("sharded", top_n)]:
+        ratio = best_secs[engine + "-telemetry"] / best_secs[engine]
+        key = ("telemetry_overhead_ratio" if engine == "sharded"
+               else "reference_overhead_ratio")
+        derived[key] = ratio
+        print(f"telemetry_overhead,ratio,{engine},N={n},{ratio:.4f}x")
+    derived["overhead_within_ceiling"] = bool(
+        derived["telemetry_overhead_ratio"] <= RATIO_CEILING)
+    derived["all_invisible_bitwise"] = all(parity.values())
+
+    write_csv("telemetry_overhead",
+              "engine,scenario,n_nodes,cycles,seconds,"
+              "node_cycles_per_sec,err_fresh", rows)
+    write_bench_json("telemetry_overhead", dict(
+        bench="telemetry_overhead",
+        quick=quick,
+        setup=dict(dim=DIM, variant="mu", cache_size=4, k_rounds=K_ROUNDS,
+                   cycles=cycles, scenario="extreme", top_n=top_n,
+                   ref_n=REF_N, probe_n=PROBE_N,
+                   ratio_ceiling=RATIO_CEILING),
+        rows=json_rows,
+        parity_bitwise=parity,
+        derived=derived,
+    ))
+    return derived
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(ap.parse_args().quick)

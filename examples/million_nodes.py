@@ -87,6 +87,12 @@ def main() -> None:
                          "round: norm_clip rescales oversized payloads to "
                          "a multiple of the receiver's own norm, "
                          "cosine_gate rejects anti-aligned ones")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="arm telemetry (bitwise invisible to the run): "
+                         "print the per-phase span summary and export a "
+                         "Chrome trace with the per-cycle metric streams "
+                         "to this path (view at ui.perfetto.dev; "
+                         "summarize with tools/trace_report.py)")
     args = ap.parse_args()
     scenario = args.scenario or ("extreme" if args.extreme else "clean")
     scenario = SCENARIO_ALIASES.get(scenario, scenario)
@@ -122,11 +128,15 @@ def main() -> None:
         print(f"adversary: {cfg.fault_model} from "
               f"{cfg.byzantine_frac:.0%} Byzantine nodes, "
               f"defense={cfg.defense}")
+    tel = None
+    if args.trace:
+        from repro.core.telemetry import Telemetry
+        tel = Telemetry(label=f"million_nodes N={n} {scenario}")
     t0 = time.time()
     res = run_simulation(cfg, X[:n], y[:n], X[n:], y[n:],
                          cycles=args.cycles,
                          eval_every=max(args.cycles // 5, 1), seed=0,
-                         engine="sharded")
+                         engine="sharded", telemetry=tel)
     dt = time.time() - t0
     print(f"\n  {'cycle':>6} {'err(fresh)':>11} {'err(voted)':>11}")
     for cyc, ef, ev in zip(res.cycles, res.err_fresh, res.err_voted):
@@ -158,6 +168,12 @@ def main() -> None:
           + f"; round-1 occupancy mean {comp['round1_occupancy_mean']:.2%} "
           f"max {comp['round1_occupancy_max']:.2%}, multi-receive mean "
           f"{comp['multi_occupancy_mean']:.2%}")
+
+    if tel is not None:
+        print("\n" + tel.phase_report())
+        fp = tel.export_chrome_trace(args.trace)
+        print(f"trace written to {fp} — open at https://ui.perfetto.dev "
+              f"or summarize with: python tools/trace_report.py {fp}")
 
 
 if __name__ == "__main__":

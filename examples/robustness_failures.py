@@ -7,6 +7,7 @@ roughly the predicted constant factor (≈ mean delay × 1/(1-drop)) but does
 NOT stall or diverge.
 
     PYTHONPATH=src python examples/robustness_failures.py --cycles 200
+    PYTHONPATH=src python examples/robustness_failures.py --trace out.json
 """
 from __future__ import annotations
 
@@ -14,6 +15,7 @@ import argparse
 import dataclasses
 
 from repro.core.simulation import run_simulation
+from repro.core.telemetry import Telemetry
 from repro.data.synthetic import paper_dataset
 
 SCENARIOS = {
@@ -30,7 +32,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cycles", type=int, default=200)
     ap.add_argument("--dataset", default="spambase")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="arm one telemetry object across the whole sweep "
+                         "(bitwise invisible): print the per-phase span "
+                         "summary and export a Chrome trace — the metric "
+                         "streams concatenate the five scenario runs in "
+                         "sweep order")
     args = ap.parse_args()
+
+    # one Telemetry across the sweep: spans share a wall-clock origin and
+    # streams concatenate per run (the supported multi-run arming mode)
+    tel = Telemetry(label=f"robustness sweep {args.dataset}") \
+        if args.trace else None
 
     X, y, Xt, yt, cfg = paper_dataset(args.dataset)
     print(f"dataset={cfg.name}: N={X.shape[0]}, extreme-failure sweep, "
@@ -39,9 +52,15 @@ def main() -> None:
     for label, kw in SCENARIOS.items():
         c = dataclasses.replace(cfg, variant="mu", **kw)
         res = run_simulation(c, X, y, Xt, yt, cycles=args.cycles,
-                             eval_every=args.cycles, seed=0)
+                             eval_every=args.cycles, seed=0, telemetry=tel)
         print(f"{label:>16} {res.err_fresh[-1]:>11.4f} "
               f"{res.err_voted[-1]:>11.4f}")
+
+    if tel is not None:
+        print("\n" + tel.phase_report())
+        fp = tel.export_chrome_trace(args.trace)
+        print(f"trace written to {fp} — open at https://ui.perfetto.dev "
+              f"or summarize with: python tools/trace_report.py {fp}")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,12 @@ def main() -> None:
                     help="answer with the fused Pallas voted_predict_batched "
                          "path (interpret mode off-TPU) instead of the jnp "
                          "einsum path; answers are bitwise identical")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="arm telemetry across the protocol AND the server "
+                         "(bitwise invisible): print the per-phase span "
+                         "summary — including snapshot_adopt/serve_batch "
+                         "serving spans and the batch-latency histogram — "
+                         "and export a Chrome trace to this path")
     args = ap.parse_args()
     scenario = SCENARIO_ALIASES.get(args.scenario, args.scenario)
 
@@ -80,8 +86,12 @@ def main() -> None:
         scenario)
     X_test, y_test = X[n:], y[n:]
 
+    tel = None
+    if args.trace:
+        from repro.core.telemetry import Telemetry
+        tel = Telemetry(label=f"serve_batched N={n} {scenario}")
     srv = GossipServer(batch_size=args.batch, policy=args.policy,
-                       use_kernel=args.use_kernel)
+                       use_kernel=args.use_kernel, telemetry=tel)
     qrng = np.random.default_rng(7)
     labels = []
 
@@ -100,7 +110,8 @@ def main() -> None:
     res = run_simulation(cfg, X[:n], y[:n], X_test, y_test,
                          cycles=args.cycles,
                          eval_every=max(args.cycles // 5, 1), seed=0,
-                         engine=args.engine, serve_hook=serve_hook)
+                         engine=args.engine, serve_hook=serve_hook,
+                         telemetry=tel)
     srv.flush()
 
     y_served = np.concatenate(labels)
@@ -123,6 +134,12 @@ def main() -> None:
     print(f"accuracy of served answers: voted {acc_voted:.4f} "
           f"vs fresh {acc_fresh:.4f} "
           f"(voted - fresh = {acc_voted - acc_fresh:+.4f})")
+
+    if tel is not None:
+        print("\n" + tel.phase_report())
+        fp = tel.export_chrome_trace(args.trace)
+        print(f"trace written to {fp} — open at https://ui.perfetto.dev "
+              f"or summarize with: python tools/trace_report.py {fp}")
 
 
 if __name__ == "__main__":

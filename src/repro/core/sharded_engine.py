@@ -86,6 +86,7 @@ from repro.core import peer_sampling
 from repro.core.cache import ModelCache
 from repro.core.learners import LinearModel, make_update
 from repro.core.merge import create_model
+from repro.core import telemetry as telemetry_mod
 from repro.core.simulation import (SimResult, _eval, ef_residual_norm,
                                    eval_points, message_wire_bytes,
                                    payload_buffer_bytes, sim_setup)
@@ -168,7 +169,7 @@ class _HostRouter:
         self.p_arr = _EMPTY_I32
 
     def route_chunk(self, dsts, arrivals, online_rows, clock0: int,
-                    k_rounds: int):
+                    k_rounds: int, per_cycle_stats: bool = False):
         """Resolve winner-per-destination rounds for a chunk of cycles.
 
         Reproduces ``select_receivers``'s semantics exactly: in round k a
@@ -197,7 +198,13 @@ class _HostRouter:
         * ``recv`` — one ascending int32 array per cycle listing ALL
           receiving nodes (the round-1 winners), which is what the fully
           compacted data-plane path gathers/scatters in sparse-delivery
-          regimes."""
+          regimes.
+
+        ``per_cycle_stats`` (armed telemetry only) adds ``lost_cycles`` and
+        ``overflow_cycles`` (T,) bincounts to ``stats`` — the per-cycle
+        message-economy streams. Both count at the ARRIVAL cycle, exactly
+        like the reference engine's per-cycle stats. Off by default so the
+        unarmed hot path pays nothing."""
         T, n = dsts.shape
         D, K = self.delay_max, k_rounds
 
@@ -223,6 +230,7 @@ class _HostRouter:
         # a message due while its destination is offline leaves the system
         on = online_rows[c_t, c_dst]
         lost = int(c_slot.size - int(on.sum()))
+        lost_t = c_t[~on] if per_cycle_stats else None
         c_slot, c_dst, c_t = c_slot[on], c_dst[on], c_t[on]
 
         # winner ranks: sort by (cycle, dst) group, ascending slot id inside
@@ -254,6 +262,11 @@ class _HostRouter:
                      overflow=overflow,
                      delivered_cycles=np.bincount(
                          win[0], minlength=T).astype(np.int64))
+        if per_cycle_stats:
+            stats["lost_cycles"] = np.bincount(
+                lost_t, minlength=T).astype(np.int64)
+            stats["overflow_cycles"] = np.bincount(
+                t_s[~wm], minlength=T).astype(np.int64)
         return win, stats, multi, recv
 
 
@@ -554,7 +567,7 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                     mesh, axis: Optional[str], mode: str,
                     wire: Optional[str], use_send_kernel: bool,
                     fault_model: Optional[str] = None,
-                    defense: str = "none"):
+                    defense: str = "none", emit_streams: bool = False):
     """Jitted data-plane chunk runner, cached per configuration.
 
     Caching the jitted callable (rather than rebuilding the closure per
@@ -605,7 +618,14 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
     per round inside every apply path. The fault key is the reference
     engine's ``fault_key`` fold-in from the scanned cycle key, so both
     engines draw identical corruption — and fault-free chunk fns are
-    built with ``fault_model=None``, leaving their traces unchanged."""
+    built with ``fault_model=None``, leaving their traces unchanged.
+
+    ``emit_streams`` (static, set by an armed ``telemetry=``) makes the
+    chunk fn return the scan's per-cycle (T,) gated/clipped int32 arrays
+    instead of their jitted sums — the driver sums on the host (exact for
+    integers) and emits them as per-cycle streams. Unarmed runs keep the
+    pre-telemetry program byte for byte; armed fns get a distinct
+    "/telem" label (and their own retrace budget)."""
     update = make_update(learner, lam=lam, eta=eta)
     fault = faults_mod.get_fault(fault_model)
     apply_fn = (_pallas_apply(lam, interpret, wire, defense) if use_pallas
@@ -885,6 +905,8 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
                                                 (tables, keydata))
         cache = ModelCache(carry[4], carry[5], carry[6], carry[7])
         errs = _eval(cache, eval_idx, X_test, y_test)
+        if emit_streams:
+            return carry, (errs, (g_cycles, cl_cycles))
         return carry, (errs, (jnp.sum(g_cycles), jnp.sum(cl_cycles)))
 
     jitted = jax.jit(chunk_fn, donate_argnums=(0,))
@@ -896,7 +918,8 @@ def _build_chunk_fn(variant: str, learner: str, lam: float, eta: float,
              + ("/pallas" if use_pallas else "")
              + ("/sendk" if use_send_kernel else "")
              + (f"/fault:{fault_model}" if fault_model else "")
-             + (f"/def:{defense}" if defense != "none" else ""))
+             + (f"/def:{defense}" if defense != "none" else "")
+             + ("/telem" if emit_streams else ""))
     _CHUNK_FNS[label] = jitted
     return jitted
 
@@ -916,7 +939,7 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                            compact_rounds: Optional[bool] = None,
                            compact_mode: Optional[str] = None,
                            use_send_kernel: Optional[bool] = None,
-                           serve_hook=None
+                           serve_hook=None, telemetry=None
                            ) -> SimResult:
     """Run the protocol with the sharded mega-population engine.
 
@@ -966,7 +989,18 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     read of the live cache lanes: bitwise identical to the reference
     engine's snapshot at the same cycle, and provably non-perturbing (the
     scan never observes the hook). The hook must consume the snapshot
-    before the next chunk runs — the chunk fn donates its carry."""
+    before the next chunk runs — the chunk fn donates its carry.
+
+    ``telemetry``: optional ``repro.core.telemetry.Telemetry`` — same
+    pure-read discipline as ``serve_hook``. Armed runs emit the registered
+    per-cycle metric streams (the router's per-cycle message economy, the
+    scan's per-cycle gated/clipped counts via the "/telem" chunk-fn
+    variant) bitwise-equal to the reference engine's streams under every
+    packing, and record host spans around routing, chunk dispatch,
+    snapshot adoption and the deferred result drain. One armed cost is
+    paid eagerly: the ``_ef`` codecs sync the EF-residual RMS at each
+    eval point (the float read must happen before the next chunk donates
+    the carry); everything else stays pipelined."""
     n, d = X.shape[0], X.shape[-1]
     D = max(cfg.delay_max_cycles, 1)
     codec = get_codec(cfg.wire_dtype)
@@ -1027,11 +1061,14 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         byz_np = faults_mod.byzantine_mask(seed, n, cfg.byzantine_frac)
         byz = jnp.asarray(byz_np)
 
+    tel = telemetry
+    armed = tel is not None
+
     def get_chunk_fn(mode: str):
         return _build_chunk_fn(cfg.variant, cfg.learner, cfg.lam, cfg.eta,
                                D, use_pallas, interpret, mesh, axis, mode,
                                cfg.wire_dtype, use_send_kernel,
-                               cfg.fault_model, cfg.defense)
+                               cfg.fault_model, cfg.defense, armed)
 
     # data-plane carry: models + cache + payload lanes of the buffer (the
     # quantized codecs add the (D, N) f16 scale lane — plus a zero-point
@@ -1088,7 +1125,9 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     # routed, so host memory stays bounded by ~one chunk of draw tables.
     prefetch = cycles * n <= 250_000_000
     if prefetch:
-        staged = [draw(lo, hi) for lo, hi in bounds]
+        with telemetry_mod.maybe_span(tel, "stage_draws", track="control",
+                                      chunks=len(bounds)):
+            staged = [draw(lo, hi) for lo, hi in bounds]
 
     # compacted-table widths, sticky across chunks (monotone powers of two)
     # so the jitted chunk fn compiles O(log n) times per run, not per chunk
@@ -1125,7 +1164,7 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         else:
             dn, an = draw(lo, hi)
         win, stats, multi, recv = router.route_chunk(
-            dn, an, online_mat[lo:hi], lo, k_rounds)
+            dn, an, online_mat[lo:hi], lo, k_rounds, per_cycle_stats=armed)
         stats["recv_sizes"] = np.array([r.size for r in recv], np.int64)
         stats["multi_sizes"] = np.array([r.size for r in multi], np.int64)
         # corrupted = Byzantine senders with send_ok (an >= 0 == the
@@ -1134,6 +1173,14 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         stats["corrupted"] = (int(byz_np[np.nonzero(an >= 0)[1]].sum())
                               if byz_np is not None else 0)
         T = hi - lo
+        if armed:
+            # per-cycle sends (and Byzantine sends) straight off the
+            # arrival table — armed-only host reductions for the streams
+            send_mask = an >= 0
+            stats["sent_cycles"] = send_mask.sum(axis=1).astype(np.int64)
+            stats["corrupted_cycles"] = (
+                (send_mask & byz_np[None, :]).sum(axis=1).astype(np.int64)
+                if byz_np is not None else np.zeros(T, np.int64))
 
         # sender lists cost T flatnonzero passes over (T, N) — build them
         # only when a compact_all packing is actually on the table
@@ -1181,22 +1228,37 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
             tables = (*tables, an >= 0)
         return mode, tables, stats
 
+    msg_bytes = message_wire_bytes(d, cfg.wire_dtype)
+    in_flight = 0
     errs_pending = []
-    pending = route(0)
+    with telemetry_mod.maybe_span(tel, "route_chunk", track="control",
+                                  chunk=0):
+        pending = route(0)
     for i, p in enumerate(pts):
         lo, hi = bounds[i]
         mode, tables, stats = pending
-        carry, (errs, fstats) = get_chunk_fn(mode)(
-            carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
-            X, y, X_test, y_test, eval_idx, byz)
+        with telemetry_mod.maybe_span(tel, "chunk_dispatch", track="device",
+                                      chunk=i, mode=mode, cycles=hi - lo):
+            carry, (errs, fstats) = get_chunk_fn(mode)(
+                carry, tuple(jnp.asarray(a) for a in tables), keydata[lo:hi],
+                X, y, X_test, y_test, eval_idx, byz)
         if serve_hook is not None:
             # pure read of the fresh carry, dispatched before the next
             # chunk donates it; the scan never observes the hook, so the
             # run is bitwise identical with or without serving
             from repro.core import serving
-            serve_hook(p, serving.snapshot_from_carry(carry))
+            with telemetry_mod.maybe_span(tel, "snapshot", track="serving",
+                                          cycle=p):
+                serve_hook(p, serving.snapshot_from_carry(carry))
+        if armed:
+            # the one eager armed read: the EF-residual RMS must be taken
+            # before the next chunk donates the carry (a no-op float for
+            # non-EF codecs — carry[12] is the empty (0, 0) lane)
+            tel.emit("ef_residual_rms", ef_residual_norm(carry[12]))
         if i + 1 < len(pts):
-            pending = route(i + 1)    # overlaps the in-flight device scan
+            with telemetry_mod.maybe_span(tel, "route_chunk",
+                                          track="control", chunk=i + 1):
+                pending = route(i + 1)   # overlaps the in-flight device scan
         res.sent_total += stats["sent"]
         res.delivered_total += stats["delivered"]
         res.lost_total += stats["lost"]
@@ -1209,12 +1271,36 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         occ_multi.append(stats["multi_sizes"])
         res.cycles.append(p)
         errs_pending.append((errs, fstats))
-    for (err_f, err_v, sim), (g, cl) in errs_pending:
-        res.err_fresh.append(float(err_f))
-        res.err_voted.append(float(err_v))
-        res.similarity.append(float(sim))
-        res.fault_stats["gated"] += int(g)
-        res.fault_stats["clipped"] += int(cl)
+        if armed:
+            # per-cycle streams for this chunk, all host-side numpy on the
+            # router's tables — identical numbers under every packing, and
+            # bitwise-equal to the reference engine's streams
+            sc = stats["sent_cycles"]
+            dc = stats["delivered_cycles"]
+            flow = np.cumsum(sc - dc - stats["lost_cycles"]
+                             - stats["overflow_cycles"]) + in_flight
+            in_flight = int(flow[-1])
+            tel.emit_row(
+                sent=sc, delivered=dc, lost=stats["lost_cycles"],
+                overflow=stats["overflow_cycles"], in_flight=flow,
+                wire_bytes=sc * msg_bytes,
+                recv_nodes=stats["recv_sizes"],
+                multi_nodes=stats["multi_sizes"],
+                online_nodes=online_mat[lo:hi].sum(axis=1),
+                corrupted=stats["corrupted_cycles"])
+    with telemetry_mod.maybe_span(tel, "collect_results", track="device",
+                                  chunks=len(errs_pending)):
+        for (err_f, err_v, sim), (g, cl) in errs_pending:
+            res.err_fresh.append(float(err_f))
+            res.err_voted.append(float(err_v))
+            res.similarity.append(float(sim))
+            # armed chunk fns return per-cycle (T,) arrays (host-summed —
+            # exact for ints); unarmed return the jit-summed scalars
+            res.fault_stats["gated"] += int(np.sum(g))
+            res.fault_stats["clipped"] += int(np.sum(cl))
+            if armed:
+                tel.emit("gated", np.asarray(g).reshape(-1))
+                tel.emit("clipped", np.asarray(cl).reshape(-1))
     r1 = np.concatenate(occ_recv) / n
     mr = np.concatenate(occ_multi) / n
     res.compaction = dict(
@@ -1226,4 +1312,9 @@ def run_sharded_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
         packed_widths=dict(widths), shards=shards)
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     res.ef_residual_norm = ef_residual_norm(carry[12])
+    if armed:
+        tel.annotations.setdefault("runs", []).append(dict(
+            engine="sharded", n_nodes=n, cycles=cycles,
+            wire_dtype=cfg.wire_dtype or "f32", message_bytes=msg_bytes,
+            chunk_modes=dict(mode_counts)))
     return res

@@ -44,6 +44,7 @@ from repro.configs.gossip_linear import GossipLinearConfig
 from repro.core import cache as cache_mod
 from repro.core import faults as faults_mod
 from repro.core import peer_sampling
+from repro.core import telemetry as telemetry_mod
 from repro.core.cache import ModelCache
 from repro.core.learners import LinearModel, make_update
 from repro.core.wire_codec import get_codec
@@ -173,7 +174,8 @@ def cycle_core(state: SimState, X, y, online, key, byz=None, *,
                variant: str, learner: str, lam: float, eta: float,
                drop: float, delay_max: int, k_rounds: int, sampler: str,
                wire_dtype: Optional[str] = None,
-               fault_model: Optional[str] = None, defense: str = "none"):
+               fault_model: Optional[str] = None, defense: str = "none",
+               emit_streams: bool = False):
     """One gossip cycle for the whole population (traceable core).
 
     ``wire_dtype`` is the wire-codec *name* (static): quantized codecs
@@ -276,6 +278,15 @@ def cycle_core(state: SimState, X, y, online, key, byz=None, *,
     stats = {"delivered": delivered, "overflow": overflow,
              "sent": send_ok.sum(), "lost": lost, "corrupted": corrupted,
              "gated": gated.sum(), "clipped": clipped.sum()}
+    if emit_streams:
+        # armed-only (static flag) receiver-occupancy reads for the
+        # telemetry streams: round-1 winners and multi-round receivers —
+        # the numbers the sharded router observes as recv/multi sizes.
+        # Extra int reductions on existing masks; the protocol state above
+        # is untouched (the pure-read contract, docs/CONTRACTS.md)
+        stats["recv_nodes"] = valid[0].sum().astype(jnp.int32)
+        stats["multi_nodes"] = (valid[1].sum().astype(jnp.int32)
+                                if k_rounds > 1 else jnp.zeros((), jnp.int32))
     return SimState(last_w, last_t, cache, buf_w, buf_t, buf_scale, buf_zp,
                     buf_dst, buf_arrival, ef, state.clock + 1), stats
 
@@ -284,12 +295,13 @@ def cycle_core(state: SimState, X, y, online, key, byz=None, *,
                                              "eta", "drop", "delay_max",
                                              "k_rounds", "sampler",
                                              "wire_dtype", "fault_model",
-                                             "defense"))
+                                             "defense", "emit_streams"))
 def simulate_cycle(state: SimState, X, y, online, key, byz=None, *,
                    variant: str, learner: str, lam: float, eta: float,
                    drop: float, delay_max: int, k_rounds: int, sampler: str,
                    wire_dtype: Optional[str] = None,
-                   fault_model: Optional[str] = None, defense: str = "none"):
+                   fault_model: Optional[str] = None, defense: str = "none",
+                   emit_streams: bool = False):
     """One gossip cycle for the whole population. Returns (state, stats).
 
     ``stats`` message economy (per cycle): every message sent at cycle c is
@@ -298,12 +310,17 @@ def simulate_cycle(state: SimState, X, y, online, key, byz=None, *,
     (arrived beyond the K winner rounds) — so over a run,
     ``sum(sent) == sum(delivered + lost + overflow) + in-flight``.
     (A defense-gated message still counts ``delivered`` — it reached its
-    destination; ``gated``/``clipped`` account the screen separately.)"""
+    destination; ``gated``/``clipped`` account the screen separately.)
+
+    ``emit_streams`` (static; set by an armed ``telemetry=``) adds the
+    receiver-occupancy stats the metric streams need. The default False
+    compiles the exact pre-telemetry program — a fault-free unarmed run's
+    trace is byte-for-byte what it was before telemetry existed."""
     return cycle_core(state, X, y, online, key, byz, variant=variant,
                       learner=learner, lam=lam, eta=eta, drop=drop,
                       delay_max=delay_max, k_rounds=k_rounds, sampler=sampler,
                       wire_dtype=wire_dtype, fault_model=fault_model,
-                      defense=defense)
+                      defense=defense, emit_streams=emit_streams)
 
 
 # ---------------------------------------------------------------------------
@@ -517,7 +534,8 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
                    cycles: int = 200, eval_every: int = 10, seed: int = 0,
                    eval_nodes: int = 100, sampler: str = "uniform",
                    k_rounds: int = 4, engine: str = "reference",
-                   serve_hook=None, **engine_kwargs) -> SimResult:
+                   serve_hook=None, telemetry=None,
+                   **engine_kwargs) -> SimResult:
     """Run the full protocol for ``cycles`` gossip cycles.
 
     The one entry point for both execution engines. Inputs: ``cfg`` fixes
@@ -557,13 +575,23 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     state (cache ring buffer + freshest models), a pure read that cannot
     perturb the run: with or without a hook, the curves are bitwise
     identical (tests/test_serving.py).
+
+    ``telemetry``: optional :class:`repro.core.telemetry.Telemetry`. When
+    armed, both engines emit the registered per-cycle metric streams
+    (``METRIC_STREAMS``: message economy, wire bytes, occupancy, fault
+    counters, EF residual RMS, online fraction) and record host spans
+    around the cycle dispatch, eval and snapshot phases. Same discipline
+    as ``serve_hook``: a pure read — armed and unarmed runs are bitwise
+    identical (tests/test_telemetry.py), and ``telemetry=None`` compiles
+    the exact pre-telemetry programs (docs/OBSERVABILITY.md).
     """
     if engine == "sharded":
         from repro.core.sharded_engine import run_sharded_simulation
         return run_sharded_simulation(
             cfg, X, y, X_test, y_test, cycles=cycles, eval_every=eval_every,
             seed=seed, eval_nodes=eval_nodes, sampler=sampler,
-            k_rounds=k_rounds, serve_hook=serve_hook, **engine_kwargs)
+            k_rounds=k_rounds, serve_hook=serve_hook, telemetry=telemetry,
+            **engine_kwargs)
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected 'reference' or 'sharded')")
@@ -590,31 +618,65 @@ def run_simulation(cfg: GossipLinearConfig, X, y, X_test, y_test, *,
     res = SimResult([], [], [], [], 0, cfg)
     res.buf_payload_bytes = payload_buffer_bytes(D, n, d, cfg.wire_dtype)
     res.fault_stats = {"corrupted": 0, "gated": 0, "clipped": 0}
+    tel = telemetry
+    armed = tel is not None
+    msg_bytes = message_wire_bytes(d, cfg.wire_dtype)
+    in_flight = 0
     for c in range(cycles):
         key, sub = jax.random.split(key)
-        state, stats = simulate_cycle(
-            state, X, y, jnp.asarray(online_mat[c]), sub, byz,
-            variant=cfg.variant, learner=cfg.learner, lam=cfg.lam,
-            eta=cfg.eta, drop=cfg.drop_prob,
-            delay_max=D, k_rounds=k_rounds,
-            sampler=sampler, wire_dtype=cfg.wire_dtype,
-            fault_model=cfg.fault_model, defense=cfg.defense)
-        res.overflow_total += int(stats["overflow"])
-        res.sent_total += int(stats["sent"])
-        res.delivered_total += int(stats["delivered"])
-        res.delivered_per_cycle.append(int(stats["delivered"]))
-        res.lost_total += int(stats["lost"])
+        with telemetry_mod.maybe_span(tel, "cycle", track="device", cycle=c):
+            state, stats = simulate_cycle(
+                state, X, y, jnp.asarray(online_mat[c]), sub, byz,
+                variant=cfg.variant, learner=cfg.learner, lam=cfg.lam,
+                eta=cfg.eta, drop=cfg.drop_prob,
+                delay_max=D, k_rounds=k_rounds,
+                sampler=sampler, wire_dtype=cfg.wire_dtype,
+                fault_model=cfg.fault_model, defense=cfg.defense,
+                emit_streams=armed)
+        sent = int(stats["sent"])
+        delivered = int(stats["delivered"])
+        lost = int(stats["lost"])
+        overflow = int(stats["overflow"])
+        res.overflow_total += overflow
+        res.sent_total += sent
+        res.delivered_total += delivered
+        res.delivered_per_cycle.append(delivered)
+        res.lost_total += lost
         for k in ("corrupted", "gated", "clipped"):
             res.fault_stats[k] += int(stats[k])
+        if armed:
+            # pure reads of the stats the driver fetched anyway: the armed
+            # run's protocol state is bitwise identical to the unarmed run
+            in_flight += sent - delivered - lost - overflow
+            tel.emit_row(
+                sent=sent, delivered=delivered, lost=lost,
+                overflow=overflow, in_flight=in_flight,
+                wire_bytes=sent * msg_bytes,
+                recv_nodes=int(stats["recv_nodes"]),
+                multi_nodes=int(stats["multi_nodes"]),
+                online_nodes=int(online_mat[c].sum()),
+                corrupted=int(stats["corrupted"]),
+                gated=int(stats["gated"]), clipped=int(stats["clipped"]))
         if (c + 1) % eval_every == 0 or c == cycles - 1:
-            err_f, err_v, sim = _eval(state.cache, eval_idx, X_test, y_test)
-            res.cycles.append(c + 1)
-            res.err_fresh.append(float(err_f))
-            res.err_voted.append(float(err_v))
-            res.similarity.append(float(sim))
+            with telemetry_mod.maybe_span(tel, "eval", track="eval",
+                                          cycle=c + 1):
+                err_f, err_v, sim = _eval(state.cache, eval_idx, X_test,
+                                          y_test)
+                res.cycles.append(c + 1)
+                res.err_fresh.append(float(err_f))
+                res.err_voted.append(float(err_v))
+                res.similarity.append(float(sim))
+            if armed:
+                tel.emit("ef_residual_rms", ef_residual_norm(state.ef))
             if serve_hook is not None:
                 from repro.core import serving
-                serve_hook(c + 1, serving.take_snapshot(state))
+                with telemetry_mod.maybe_span(tel, "snapshot",
+                                              track="serving", cycle=c + 1):
+                    serve_hook(c + 1, serving.take_snapshot(state))
     res.wire_bytes_total = res.sent_total * message_wire_bytes(d, cfg.wire_dtype)
     res.ef_residual_norm = ef_residual_norm(state.ef)
+    if armed:
+        tel.annotations.setdefault("runs", []).append(dict(
+            engine="reference", n_nodes=n, cycles=cycles,
+            wire_dtype=cfg.wire_dtype or "f32", message_bytes=msg_bytes))
     return res

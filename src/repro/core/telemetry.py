@@ -1,0 +1,504 @@
+"""Protocol telemetry: metric streams, host spans, latency histograms.
+
+The paper's experimental story (Figs. 1-7) is entirely about *observing* a
+running protocol — error curves, message economies, convergence under
+churn. This module is the one home for that observability, with three
+faces:
+
+* **Per-cycle metric streams** — ``METRIC_STREAMS`` is a registered schema
+  (same both-ways docs-gate philosophy as ``WIRE_CODECS``/``FAULT_MODELS``:
+  the table in docs/OBSERVABILITY.md is cross-checked against this registry
+  by ``tools/check_docs.py``) of the series both engines emit identically:
+  the message economy (the PR 1 balance invariant, continuously emitted),
+  wire bytes, receiver occupancy, fault counters, EF residual RMS and the
+  online fraction. Because the reference engine and all three sharded
+  packings emit the same numbers, the metric stream itself is a
+  cross-engine parity surface (tests/test_telemetry.py).
+* **Host spans** — ``telemetry.span("route_chunk")`` wraps the control
+  plane, scan dispatch, snapshot adoption and serving batch assembly with
+  wall-clock timing plus a jit compile-count delta per span (via the
+  engines' compile caches — ``retrace_counts()`` and ``_cache_size()``),
+  exported as Chrome trace-event JSON (:meth:`Telemetry.export_chrome_trace`)
+  viewable in Perfetto and summarized by ``tools/trace_report.py``.
+* **Latency histograms** — :class:`LatencyHistogram` is the fixed-bucket
+  log-scale histogram behind every latency percentile in the repo
+  (``GossipServer`` batch latency, ``BENCH_serving.json`` p50/p90/p99/p999),
+  replacing ad-hoc per-call percentile math.
+
+The hard contract (docs/CONTRACTS.md): **telemetry is a pure read**.
+``telemetry=None`` (the default everywhere) compiles to the exact pre-
+telemetry engines — the armed collection paths are statically gated, the
+same mechanism as the fault machinery — and an armed :class:`Telemetry`
+must leave error curves and all protocol state bitwise identical on both
+engines. Telemetry never touches ``jax.random``: spans and histograms use
+``time.perf_counter`` and streams are integer/float *reads* of state the
+engines already computed, so the pinned threefry chain
+(tools/lint/rng_allowlist.py) cannot shift.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from contextlib import nullcontext
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# metric-stream registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MetricStream:
+    """Schema entry for one registered per-run metric series.
+
+    ``cadence`` is "cycle" (one value per gossip cycle) or "eval" (one
+    value per eval point). ``parity`` marks the stream as part of the
+    cross-engine parity surface: reference and sharded runs at a matched
+    seed must emit it bitwise-identically (integers exactly; floats via
+    identical op sequences on bitwise-equal state)."""
+    name: str
+    cadence: str            # "cycle" | "eval"
+    dtype: str              # "int" | "float"
+    parity: bool
+    description: str
+
+
+def _stream(name, cadence, dtype, parity, description):
+    return name, MetricStream(name, cadence, dtype, parity, description)
+
+
+# The registered schema. Every stream is emitted by BOTH engines (and by
+# every sharded packing) when a run is armed; docs/OBSERVABILITY.md mirrors
+# this table and tools/check_docs.py fails when either side drifts.
+METRIC_STREAMS: Dict[str, MetricStream] = dict([
+    _stream("sent", "cycle", "int", True,
+            "messages entering the network this cycle (send_ok senders)"),
+    _stream("delivered", "cycle", "int", True,
+            "messages accepted by an online node within the K rounds"),
+    _stream("lost", "cycle", "int", True,
+            "messages due this cycle whose destination was offline"),
+    _stream("overflow", "cycle", "int", True,
+            "arrivals beyond the K winner rounds (truncated receives)"),
+    _stream("in_flight", "cycle", "int", True,
+            "messages still in the delay buffer after this cycle "
+            "(cumulative sent - delivered - lost - overflow; the PR 1 "
+            "balance invariant, continuously emitted)"),
+    _stream("wire_bytes", "cycle", "int", True,
+            "bytes put on the wire this cycle (sent x per-message bytes "
+            "of the run's wire codec)"),
+    _stream("recv_nodes", "cycle", "int", True,
+            "nodes receiving at least one message (round-1 winners; the "
+            "numerator of the router's compaction occupancy)"),
+    _stream("multi_nodes", "cycle", "int", True,
+            "nodes receiving in round 2 or later (the compact packing's "
+            "subset)"),
+    _stream("online_nodes", "cycle", "int", True,
+            "nodes online this cycle (the churn trace row sum)"),
+    _stream("corrupted", "cycle", "int", True,
+            "Byzantine sends this cycle (fault model armed and send_ok)"),
+    _stream("gated", "cycle", "int", True,
+            "receives rejected by the defense screen this cycle"),
+    _stream("clipped", "cycle", "int", True,
+            "receives rescaled by norm_clip this cycle"),
+    _stream("ef_residual_rms", "eval", "float", True,
+            "RMS per-node L2 norm of the error-feedback residual at each "
+            "eval point (0.0 for codecs without EF state)"),
+])
+
+
+# ---------------------------------------------------------------------------
+# host spans
+# ---------------------------------------------------------------------------
+
+# span tracks become named Perfetto threads; the index is the trace tid
+TRACKS: Tuple[str, ...] = ("host", "control", "device", "serving", "eval")
+
+# span naming convention (docs/OBSERVABILITY.md): snake_case verbs naming
+# the phase, stable across PRs so trace diffs stay meaningful
+SPAN_NAMES = {
+    "route_chunk":    "control — host winner routing for one chunk",
+    "stage_draws":    "control — upfront device draws for all chunks",
+    "chunk_dispatch": "device — dispatch one data-plane scan chunk",
+    "cycle":          "device — one reference-engine cycle (dispatch+sync)",
+    "eval":           "eval — population error at an eval point",
+    "collect_results": "device — drain deferred eval results (sync point)",
+    "snapshot":       "serving — snapshot build + serve_hook call",
+    "snapshot_adopt": "serving — GossipServer adopts a snapshot (sync)",
+    "serve_batch":    "serving — assemble + answer one query batch",
+}
+
+
+def compile_cache_sizes() -> int:
+    """Total jit compile-cache entries across the repo's hot-path fns.
+
+    The per-span delta of this number is the span's "compiles" count —
+    the same counters ``tools/lint/retrace_guard.py`` budgets. Reads via
+    ``sys.modules`` so telemetry never forces an engine import."""
+    total = 0
+    sim = sys.modules.get("repro.core.simulation")
+    if sim is not None:
+        total += sim.simulate_cycle._cache_size()
+        total += sim._eval._cache_size()
+    sh = sys.modules.get("repro.core.sharded_engine")
+    if sh is not None:
+        total += sum(sh.retrace_counts().values())
+    srv = sys.modules.get("repro.core.serving")
+    if srv is not None:
+        total += (srv.serve_fresh._cache_size()
+                  + srv.serve_voted._cache_size()
+                  + srv.serve_voted_kernel._cache_size())
+    return total
+
+
+@dataclass
+class Span:
+    """One finished host span (relative perf_counter seconds)."""
+    name: str
+    track: str
+    t0: float
+    t1: float
+    compiles: int
+    args: Dict[str, object]
+
+    @property
+    def seconds(self) -> float:
+        return self.t1 - self.t0
+
+
+class _SpanCtx:
+    __slots__ = ("tel", "name", "track", "args", "_t0", "_c0")
+
+    def __init__(self, tel: "Telemetry", name: str, track: str, args):
+        self.tel, self.name, self.track, self.args = tel, name, track, args
+
+    def __enter__(self):
+        self._c0 = compile_cache_sizes()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        self.tel.spans.append(Span(
+            self.name, self.track, self._t0 - self.tel._origin,
+            t1 - self.tel._origin, compile_cache_sizes() - self._c0,
+            self.args))
+        return False
+
+
+def maybe_span(tel: Optional["Telemetry"], name: str, track: str = "host",
+               **args):
+    """``tel.span(...)`` when armed, a free ``nullcontext`` when not — the
+    one-liner the engines use so the unarmed hot path stays untouched."""
+    if tel is None:
+        return nullcontext()
+    return tel.span(name, track=track, **args)
+
+
+# ---------------------------------------------------------------------------
+# latency histogram
+# ---------------------------------------------------------------------------
+
+
+class LatencyHistogram:
+    """Fixed-bucket log-scale latency histogram (seconds).
+
+    64 buckets, 8 per decade from 1 microsecond to 100 seconds, plus an
+    underflow and an overflow bucket — the same fixed edges everywhere, so
+    histograms from different runs/servers merge exactly (bucket-wise
+    addition) and bucket dumps in BENCH_serving.json stay comparable
+    across PRs. Percentiles interpolate linearly inside the owning bucket
+    and are clamped to the exact observed [min, max], so single-sample and
+    constant-sample histograms report exact values."""
+
+    EDGES = np.logspace(-6.0, 2.0, 8 * 8 + 1)     # 65 edges, 64 buckets
+
+    def __init__(self):
+        self.counts = np.zeros(self.EDGES.size + 1, np.int64)
+        self.count = 0
+        self.total = 0.0
+        self.min_value = float("inf")
+        self.max_value = 0.0
+
+    def record(self, seconds: float) -> None:
+        self.record_many([seconds])
+
+    def record_many(self, seconds) -> None:
+        v = np.asarray(seconds, np.float64).ravel()
+        if v.size == 0:
+            return
+        idx = np.searchsorted(self.EDGES, v, side="right")
+        np.add.at(self.counts, idx, 1)
+        self.count += int(v.size)
+        self.total += float(v.sum())
+        self.min_value = min(self.min_value, float(v.min()))
+        self.max_value = max(self.max_value, float(v.max()))
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        self.counts += other.counts
+        self.count += other.count
+        self.total += other.total
+        self.min_value = min(self.min_value, other.min_value)
+        self.max_value = max(self.max_value, other.max_value)
+        return self
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100] -> seconds (0.0 on an empty histogram)."""
+        if self.count == 0:
+            return 0.0
+        target = q / 100.0 * self.count
+        cum = 0.0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.EDGES[i - 1] if i > 0 else self.min_value
+                hi = (self.EDGES[i] if i < self.EDGES.size
+                      else self.max_value)
+                frac = (target - cum) / c
+                v = lo + frac * (hi - lo)
+                return float(min(max(v, self.min_value), self.max_value))
+            cum += c
+        return self.max_value
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p90(self) -> float:
+        return self.percentile(90.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def p999(self) -> float:
+        return self.percentile(99.9)
+
+    def to_dict(self) -> dict:
+        """JSON-ready dump: only the occupied buckets (sparse — the fixed
+        edge grid is implied by ``bucket_le``, each bucket's upper edge)."""
+        nz = np.nonzero(self.counts)[0]
+        return dict(
+            count=self.count,
+            mean_s=self.mean,
+            min_s=self.min_value if self.count else 0.0,
+            max_s=self.max_value,
+            p50_s=self.p50, p90_s=self.p90, p99_s=self.p99,
+            p999_s=self.p999,
+            bucket_le=[(float(self.EDGES[i]) if i < self.EDGES.size
+                        else float("inf")) for i in nz],
+            bucket_counts=[int(self.counts[i]) for i in nz],
+        )
+
+
+# ---------------------------------------------------------------------------
+# shared wall-clock helpers (the one home for bench timing)
+# ---------------------------------------------------------------------------
+
+
+class Timer:
+    """Context-manager wall clock; ``.s`` holds elapsed seconds.
+
+    The single Timer the benchmarks use (re-exported by
+    ``benchmarks/common.py``) — perf_counter-based, monotonic."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+        return False
+
+
+def best_of(fn, repeats: int = 2):
+    """Min-time estimator: call ``fn()`` ``repeats`` times.
+
+    Returns ``(best_seconds, all_seconds, last_result)``. Shared-container
+    noise is strictly additive, so the minimum is the estimator every
+    bench uses (previously copy-pasted per bench as a secs list + min)."""
+    secs: List[float] = []
+    result = None
+    for _ in range(max(repeats, 1)):
+        with Timer() as t:
+            result = fn()
+        secs.append(t.s)
+    return min(secs), secs, result
+
+
+# ---------------------------------------------------------------------------
+# the Telemetry object
+# ---------------------------------------------------------------------------
+
+
+class Telemetry:
+    """Armed observability for one (or several back-to-back) runs.
+
+    Pass as ``run_simulation(..., telemetry=tel)`` (either engine) and/or
+    ``GossipServer(telemetry=tel)``. Collects the registered metric
+    streams, host spans and latency histograms; export with
+    :meth:`export_chrome_trace`, summarize with :meth:`phase_report` or
+    ``tools/trace_report.py`` on the exported file.
+
+    Arming one Telemetry across several sequential runs is supported —
+    spans share one wall-clock origin and stream segments concatenate in
+    run order (each run's ``in_flight`` balance restarts from zero at its
+    own first cycle)."""
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self.streams: Dict[str, List] = {n: [] for n in METRIC_STREAMS}
+        self.spans: List[Span] = []
+        self.histograms: Dict[str, LatencyHistogram] = {}
+        self.annotations: Dict[str, object] = {}
+        self._origin = time.perf_counter()
+
+    # ------------------------------------------------------------- streams
+    def emit(self, name: str, values) -> None:
+        """Append value(s) to a registered stream (scalar or sequence)."""
+        if name not in METRIC_STREAMS:
+            raise KeyError(f"unregistered metric stream {name!r} "
+                           f"(registered: {sorted(METRIC_STREAMS)})")
+        if np.ndim(values) == 0:
+            self.streams[name].append(
+                float(values) if METRIC_STREAMS[name].dtype == "float"
+                else int(values))
+        else:
+            kind = METRIC_STREAMS[name].dtype
+            self.streams[name].extend(
+                float(v) if kind == "float" else int(v) for v in values)
+
+    def emit_row(self, **values) -> None:
+        """Emit one value into several streams at once."""
+        for name, v in values.items():
+            self.emit(name, v)
+
+    def stream_array(self, name: str) -> np.ndarray:
+        kind = METRIC_STREAMS[name].dtype
+        return np.asarray(self.streams[name],
+                          np.float64 if kind == "float" else np.int64)
+
+    # --------------------------------------------------------------- spans
+    def span(self, name: str, track: str = "host", **args) -> _SpanCtx:
+        if track not in TRACKS:
+            raise ValueError(f"unknown span track {track!r} "
+                             f"(expected one of {TRACKS})")
+        return _SpanCtx(self, name, track, args)
+
+    def histogram(self, name: str) -> LatencyHistogram:
+        return self.histograms.setdefault(name, LatencyHistogram())
+
+    # ------------------------------------------------------------ reports
+    def phase_seconds(self) -> Dict[str, float]:
+        """Total span seconds per span name (the per-phase summary)."""
+        out: Dict[str, float] = {}
+        for s in self.spans:
+            out[s.name] = out.get(s.name, 0.0) + s.seconds
+        return out
+
+    def compile_total(self) -> int:
+        return sum(s.compiles for s in self.spans)
+
+    def wall_seconds(self) -> float:
+        if not self.spans:
+            return 0.0
+        return (max(s.t1 for s in self.spans)
+                - min(s.t0 for s in self.spans))
+
+    def phase_report(self) -> str:
+        """Printable per-phase table (what the ``--trace`` example flags
+        show; the standalone equivalent over an exported file is
+        ``tools/trace_report.py``)."""
+        wall = self.wall_seconds()
+        lines = [f"telemetry: {len(self.spans)} spans, "
+                 f"{self.compile_total()} jit compiles, "
+                 f"{wall:.3f}s spanned wall clock"]
+        counts: Dict[str, int] = {}
+        compiles: Dict[str, int] = {}
+        for s in self.spans:
+            counts[s.name] = counts.get(s.name, 0) + 1
+            compiles[s.name] = compiles.get(s.name, 0) + s.compiles
+        for name, secs in sorted(self.phase_seconds().items(),
+                                 key=lambda kv: -kv[1]):
+            pct = 100.0 * secs / wall if wall > 0 else 0.0
+            lines.append(f"  {name:<16} {secs:>9.3f}s {pct:>5.1f}%  "
+                         f"x{counts[name]:<5d} compiles={compiles[name]}")
+        sent = self.stream_array("sent")
+        wb = self.stream_array("wire_bytes")
+        if sent.size:
+            lines.append(f"  streams: {sent.size} cycles, "
+                         f"{sent.mean():,.0f} msgs/cycle sent, "
+                         f"{wb.mean():,.0f} wire B/cycle")
+        for name, h in sorted(self.histograms.items()):
+            if h.count:
+                lines.append(
+                    f"  hist {name}: n={h.count} p50={h.p50 * 1e3:.3f}ms "
+                    f"p99={h.p99 * 1e3:.3f}ms p999={h.p999 * 1e3:.3f}ms")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------- chrome export
+    def export_chrome_trace(self, path) -> Path:
+        """Write Chrome trace-event JSON (the ``chrome://tracing`` /
+        Perfetto "JSON" flavor): one complete ("X") event per span on a
+        named thread per track, an instant event per span that triggered
+        jit compiles, and the per-cycle metric streams as counter ("C")
+        events on a synthetic pid=1 timeline where 1 cycle == 1
+        microsecond (protocol time, not wall time — labeled as such).
+        Streams, histograms and annotations ride in ``otherData`` so
+        ``tools/trace_report.py`` can rebuild the full summary from the
+        file alone."""
+        events: List[dict] = [
+            {"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+             "args": {"name": f"gossip host{' ' + self.label if self.label else ''}"}},
+            {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+             "args": {"name": "protocol streams (1 cycle = 1 us)"}},
+        ]
+        for tid, track in enumerate(TRACKS):
+            events.append({"ph": "M", "pid": 0, "tid": tid,
+                           "name": "thread_name", "args": {"name": track}})
+        for s in self.spans:
+            tid = TRACKS.index(s.track)
+            args = {k: (v if isinstance(v, (int, float, str, bool))
+                        else str(v)) for k, v in s.args.items()}
+            args["compiles"] = s.compiles
+            events.append({"ph": "X", "pid": 0, "tid": tid, "name": s.name,
+                           "ts": s.t0 * 1e6, "dur": s.seconds * 1e6,
+                           "args": args, "cat": s.track})
+            if s.compiles:
+                events.append({"ph": "i", "pid": 0, "tid": tid,
+                               "name": f"jit compile x{s.compiles}",
+                               "ts": s.t0 * 1e6, "s": "t",
+                               "cat": "compile"})
+        for name, spec in METRIC_STREAMS.items():
+            if spec.cadence != "cycle":
+                continue
+            vals = self.streams[name]
+            for c, v in enumerate(vals):
+                events.append({"ph": "C", "pid": 1, "tid": 0, "name": name,
+                               "ts": float(c), "args": {name: v}})
+        payload = {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {
+                "label": self.label,
+                "annotations": self.annotations,
+                "streams": {n: self.streams[n] for n in METRIC_STREAMS},
+                "histograms": {n: h.to_dict()
+                               for n, h in self.histograms.items()},
+                "compile_total": self.compile_total(),
+            },
+        }
+        fp = Path(path)
+        fp.write_text(json.dumps(payload) + "\n")
+        return fp

@@ -15,8 +15,12 @@ then ``serve_voted`` / ``serve_voted_kernel``, optionally ``serve_fresh``
 alongside for the fresh-vs-voted comparison); ``flush()`` pads the tail to
 the batch shape — one compiled signature per (N, batch) — and slices the
 answers back. Per-batch latency is measured around the predict dispatch
-with the answer blocked to completion; ``stats()`` aggregates queries/s
-and p50/p99 batch latency.
+with the answer blocked to completion and recorded into the shared
+fixed-bucket :class:`repro.core.telemetry.LatencyHistogram`; ``stats()``
+aggregates queries/s and p50/p90/p99/p999 batch latency from it (the same
+histogram BENCH_serving.json dumps bucket-wise). Pass ``telemetry=`` to
+additionally record snapshot-adoption and batch-assembly spans on the
+"serving" trace track.
 
     PYTHONPATH=src python examples/serve_batched.py    # end-to-end driver
 """
@@ -31,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import serving
+from repro.core import telemetry as telemetry_mod
+from repro.core.telemetry import LatencyHistogram
 
 
 @dataclass
@@ -53,6 +59,10 @@ class ServeStats:
     p50_latency_s: float
     p99_latency_s: float
     serve_seconds: float
+    # histogram-backed tail percentiles (same fixed buckets everywhere)
+    p90_latency_s: float = 0.0
+    p999_latency_s: float = 0.0
+    latency_hist: Optional[dict] = None
 
 
 @dataclass
@@ -72,14 +82,21 @@ class GossipServer:
     seed: int = 0
     use_kernel: bool = False
     compare_fresh: bool = True
+    telemetry: Optional[telemetry_mod.Telemetry] = None
 
     snapshot: Optional[serving.QuerySnapshot] = None
     snapshot_cycle: int = -1
     batches: List[ServedBatch] = field(default_factory=list)
+    hist: LatencyHistogram = field(default_factory=LatencyHistogram)
     _pending_x: List[np.ndarray] = field(default_factory=list)
     _pending_ids: List[int] = field(default_factory=list)
     _next_id: int = 0
     _served: int = 0           # assignment-policy offset across batches
+
+    def __post_init__(self):
+        if self.telemetry is not None:
+            # share the server's histogram so it rides in the trace export
+            self.telemetry.histograms["serve_batch_latency"] = self.hist
 
     # ------------------------------------------------------------------ hook
     def serve_hook(self, cycle: int, snapshot: serving.QuerySnapshot):
@@ -87,9 +104,11 @@ class GossipServer:
         snapshot, blocking until the engine materialized EVERY leaf (the
         cache tensor dominates at large N) — so the batch latency below
         measures serving, not leftover simulation compute."""
-        jax.block_until_ready(snapshot)
-        self.snapshot = snapshot
-        self.snapshot_cycle = int(cycle)
+        with telemetry_mod.maybe_span(self.telemetry, "snapshot_adopt",
+                                      track="serving", cycle=int(cycle)):
+            jax.block_until_ready(snapshot)
+            self.snapshot = snapshot
+            self.snapshot_cycle = int(cycle)
 
     # --------------------------------------------------------------- queries
     def submit(self, X) -> None:
@@ -108,6 +127,11 @@ class GossipServer:
             self._serve_pending()
 
     def _serve_pending(self) -> None:
+        with telemetry_mod.maybe_span(self.telemetry, "serve_batch",
+                                      track="serving"):
+            self._serve_pending_inner()
+
+    def _serve_pending_inner(self) -> None:
         if self.snapshot is None:
             raise RuntimeError("no snapshot yet — wire serve_hook into "
                                "run_simulation before submitting queries")
@@ -136,6 +160,7 @@ class GossipServer:
             preds = serving.serve_voted(snap.w, snap.count, xj, aj)
         preds.block_until_ready()
         dt = time.perf_counter() - t0
+        self.hist.record(dt)
 
         fresh = None
         if self.compare_fresh:
@@ -162,12 +187,17 @@ class GossipServer:
         return out
 
     def stats(self) -> ServeStats:
-        lats = np.asarray([b.latency_s for b in self.batches])
-        total = float(lats.sum()) if lats.size else 0.0
+        """Aggregate from the shared fixed-bucket histogram — the same
+        p50/p90/p99/p999 estimator every latency number in the repo uses
+        (``repro.core.telemetry.LatencyHistogram``; the previous inline
+        ``np.percentile`` copy is gone)."""
+        h = self.hist
+        total = h.total
         q = int(sum(b.size for b in self.batches))
         return ServeStats(
             queries=q, batches=len(self.batches),
             queries_per_sec=q / total if total > 0 else 0.0,
-            p50_latency_s=float(np.percentile(lats, 50)) if lats.size else 0.0,
-            p99_latency_s=float(np.percentile(lats, 99)) if lats.size else 0.0,
-            serve_seconds=total)
+            p50_latency_s=h.p50, p99_latency_s=h.p99,
+            serve_seconds=total, p90_latency_s=h.p90,
+            p999_latency_s=h.p999,
+            latency_hist=h.to_dict() if h.count else None)

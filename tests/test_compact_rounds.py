@@ -128,9 +128,11 @@ def test_forced_compact_all_to_dense_fallback_mid_run(monkeypatch):
     orig = se._HostRouter.route_chunk
     calls = []
 
-    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds):
+    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds,
+             per_cycle_stats=False):
         src_slot, stats, multi, recv = orig(self, dsts, arrivals,
-                                            online_rows, clock0, k_rounds)
+                                            online_rows, clock0, k_rounds,
+                                            per_cycle_stats=per_cycle_stats)
         if len(calls) == 1:           # middle chunk: claim full receiver set
             full = [np.arange(self.n, dtype=np.int32)] * len(recv)
             multi, recv = full, full

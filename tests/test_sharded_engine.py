@@ -179,9 +179,11 @@ def test_compact_dense_fallback_mid_run(monkeypatch):
     orig = se._HostRouter.route_chunk
     calls = []
 
-    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds):
+    def fake(self, dsts, arrivals, online_rows, clock0, k_rounds,
+             per_cycle_stats=False):
         src_slot, stats, multi, recv = orig(self, dsts, arrivals,
-                                            online_rows, clock0, k_rounds)
+                                            online_rows, clock0, k_rounds,
+                                            per_cycle_stats=per_cycle_stats)
         if len(calls) == 1:           # middle chunk: claim near-full rounds
             full = [np.arange(self.n, dtype=np.int32)] * len(multi)
             multi, recv = full, full

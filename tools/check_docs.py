@@ -25,7 +25,9 @@ tables** in docs/ENGINES.md (``fault-model-table`` / ``defense-table``
 markers) are held to the same standard against
 ``repro.core.faults.FAULT_MODELS`` / ``DEFENSES``, as is the
 **repro-lint rule table** in docs/CONTRACTS.md (``lint-rule-table``
-markers) against ``tools/lint/rules.RULES``.
+markers) against ``tools/lint/rules.RULES``, and the **metric-stream
+table** in docs/OBSERVABILITY.md (``metric-stream-table`` markers)
+against ``repro.core.telemetry.METRIC_STREAMS``.
 
 Run directly or via tools/run_tests.sh; exits non-zero listing every stale
 reference.
@@ -259,12 +261,49 @@ def check_lint_rules(errors: list) -> None:
                       "which is not a registered repro-lint rule")
 
 
+METRIC_TABLE = re.compile(
+    r"<!--\s*metric-stream-table:begin\s*-->(.*?)"
+    r"<!--\s*metric-stream-table:end\s*-->", re.S)
+
+
+def registered_metric_streams():
+    """The telemetry metric-stream registry, imported from the source
+    tree: the set of stream names docs/OBSERVABILITY.md must mirror."""
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.core.telemetry import METRIC_STREAMS
+        return set(METRIC_STREAMS)
+    finally:
+        sys.path.pop(0)
+
+
+def check_metric_registry(errors: list) -> None:
+    """Metric-stream registry <-> docs/OBSERVABILITY.md, both directions."""
+    doc = REPO / "docs" / "OBSERVABILITY.md"
+    text = doc.read_text() if doc.is_file() else ""
+    m = METRIC_TABLE.search(text)
+    if not m:
+        errors.append("docs/OBSERVABILITY.md: missing the "
+                      "<!-- metric-stream-table:begin/end --> markers "
+                      "around the metric-stream table")
+        return
+    doc_names = _table_names(m.group(1))
+    registered = registered_metric_streams()
+    for name in sorted(registered - doc_names):
+        errors.append(f"docs/OBSERVABILITY.md: registered metric stream "
+                      f"{name!r} missing from the metric-stream table")
+    for name in sorted(doc_names - registered):
+        errors.append(f"docs/OBSERVABILITY.md: metric-stream table names "
+                      f"{name!r}, which is not a registered metric stream")
+
+
 def main() -> int:
     corpus = source_corpus()
     errors = []
     check_codec_registry(errors)
     check_fault_registry(errors)
     check_lint_rules(errors)
+    check_metric_registry(errors)
     for doc in DOC_FILES:
         if not doc.is_file():
             continue

@@ -49,9 +49,11 @@ _IDX = re.compile(r"\[\d+:")
 # compile source. Raising a number here is an explicit, reviewed act —
 # justify it in the commit message (e.g. a new chunk signature axis).
 BUDGETS: Dict[str, int] = {
-    # reference engine: one cycle signature; eval shapes are shared with
-    # the sharded engine, so _eval compiles once across the whole suite
-    "simulation.simulate_cycle": 1,
+    # reference engine: one cycle signature per emit_streams static — the
+    # suite runs unarmed AND telemetry-armed legs, so exactly 2; eval
+    # shapes are shared with the sharded engine (and unchanged by arming),
+    # so _eval compiles once across the whole suite
+    "simulation.simulate_cycle": 2,
     "simulation._eval": 1,
     # sharded control plane: one signature per scenario statics
     # (drop/delay/sampler) x chunk length — the suite uses one scenario
@@ -59,6 +61,10 @@ BUDGETS: Dict[str, int] = {
     "sharded_engine._draw_chunk": 1,
     # data plane: one signature per chunk length; the f32 dense config
     "sharded_engine.chunk_fn[mu/pegasos/dense/f32]": 1,
+    # ... the telemetry-armed variant of the same config (distinct label:
+    # armed chunk fns return per-cycle stream arrays, unarmed runs never
+    # build it — the bitwise-invisibility contract of docs/CONTRACTS.md)
+    "sharded_engine.chunk_fn[mu/pegasos/dense/f32/telem]": 1,
     # ... and the int8 compact_all config: packed widths are sticky
     # power-of-two buckets, so a short run sees at most 2 width buckets
     # before sticking
@@ -172,6 +178,15 @@ def _mini_suite():
     cfg_q = dataclasses.replace(cfg, wire_dtype="int8")
     run_simulation(cfg_q, X, y, Xt, yt, engine="sharded",
                    compact_mode="compact_all", **kw)
+    # telemetry-armed legs: arming is a compile-time static (emit_streams
+    # on the reference cycle fn, a "/telem" chunk-fn variant on the
+    # sharded engine), so each armed config costs exactly one extra
+    # signature — and a warm armed rerun must compile nothing, like every
+    # other leg
+    from repro.core.telemetry import Telemetry
+    run_simulation(cfg, X, y, Xt, yt, telemetry=Telemetry(), **kw)
+    run_simulation(cfg, X, y, Xt, yt, engine="sharded",
+                   compact_rounds=False, telemetry=Telemetry(), **kw)
 
 
 def main(argv=None) -> int:

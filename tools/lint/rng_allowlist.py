@@ -65,4 +65,12 @@ RNG_ALLOWED: Dict[Tuple[str, str], FrozenSet[str]] = {
     # break cross-engine parity exactly the way this allowlist exists to
     # prevent. Keep it that way: a jax.random call appearing in
     # core/serving.py should fail this rule, not get registered here.
+    # core/telemetry.py likewise has NO entry on purpose: telemetry is a
+    # pure read (docs/CONTRACTS.md) — spans and histograms are
+    # perf_counter host timing, metric streams re-read state the engines
+    # already computed, and the armed collection paths in
+    # core/simulation.py / core/sharded_engine.py add zero draws (the
+    # emit_streams statics only widen what the existing fns RETURN). Any
+    # jax.random call appearing in core/telemetry.py should fail this
+    # rule, not get registered here.
 }
